@@ -1,0 +1,76 @@
+"""Render the §Roofline table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod16x16]
+
+Columns per (arch × shape): the three roofline terms (HLO-derived and
+analytic), dominant term, MODEL_FLOPS/HLO_FLOPs ratio, roofline-MFU, and
+memory-fit status of the deployment compile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+HBM_PER_CHIP = 16e9  # TPU v5e-class
+
+
+def load_records(out_dir: pathlib.Path, mesh: str):
+    recs = []
+    for f in sorted(out_dir.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return recs
+
+
+def fit_status(r: dict) -> str:
+    mem = r.get("memory_deploy") or r.get("memory", {})
+    if "error" in mem:
+        return "n/a"
+    total = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+    return f"{total/1e9:.1f}GB {'OK' if total <= HBM_PER_CHIP else 'OVER'}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument(
+        "--dir",
+        default=str(pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"),
+    )
+    args = ap.parse_args()
+    recs = load_records(pathlib.Path(args.dir), args.mesh)
+
+    hdr = (
+        "| arch | shape | HLO c/m/coll (s) | analytic c/m/coll (s) | dominant "
+        "| useful/HLO | MFU(roofline) | mem/chip |"
+    )
+    print(hdr)
+    print("|" + "---|" * 8)
+    for r in recs:
+        if "skipped" in r:
+            print(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                f"skipped: sub-quadratic gate |"
+            )
+            continue
+        t = r["roofline"]
+        a = r["roofline_analytic"]
+        dominant = a["dominant"]
+        print(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute_s']:.3f}/{t['memory_s']:.3f}/{t['collective_s']:.3f} "
+            f"| {a['compute_s']:.3f}/{a['memory_s']:.3f}/{a['collective_s']:.3f} "
+            f"| {dominant} "
+            f"| {t['useful_flops_fraction']:.2f} "
+            f"| {a['mfu']:.3f} "
+            f"| {fit_status(r)} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pipeline-parallel demo: the paper's sync optimizer planning a whisper-like
+stage graph (encoder output fanning out to every decoder stage), executed by
+the DSWP thread runner with only the retained hand-offs.
+
+    PYTHONPATH=src python examples/pipeline_demo.py --stages 6 --microbatches 8
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.pipeline import PipelineRunner
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--stages", type=int, default=6)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--fanout-from", type=int, default=0,
+                    help="stage whose output every later stage consumes")
+    args = ap.parse_args()
+
+    S = args.stages
+    skips = tuple((args.fanout_from, d) for d in range(args.fanout_from + 2, S))
+
+    # stage functions: tiny jit'd MLPs (skip inputs are summed in)
+    keys = jax.random.split(jax.random.PRNGKey(0), S)
+    ws = [jax.random.normal(k, (16, 16)) * 0.3 for k in keys]
+
+    def mk(s):
+        @jax.jit
+        def fn(x):
+            if isinstance(x, tuple):
+                base, *sk = x
+                x = base + sum(sk)
+            return jnp.tanh(x @ ws[s])
+
+        return fn
+
+    runner = PipelineRunner(
+        [mk(s) for s in range(S)], skips=skips, num_microbatches=args.microbatches
+    )
+    print("stage graph:", S, "stages; skip edges:", skips)
+    print("sync plan:", runner.plan.summary())
+
+    inputs = [
+        jax.random.normal(jax.random.fold_in(keys[0], m), (4, 16))
+        for m in range(args.microbatches)
+    ]
+    out, stats = runner.run(inputs)
+    ref = runner.run_reference(inputs)
+    ok = all(
+        bool(jnp.allclose(a, b, atol=1e-5)) for a, b in zip(out, ref)
+    )
+    print(
+        f"executed {stats.microbatches} microbatches over {stats.stages} stages: "
+        f"{stats.handoffs} hand-offs ({stats.handoffs_per_microbatch:.0f}/microbatch; "
+        f"naive schedule: {runner.naive_handoffs_per_microbatch()}/microbatch)"
+    )
+    print("matches sequential reference:", ok)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Quickstart: the paper's algorithms end-to-end on its own examples.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks Alg.1 → Alg.3 (fission), Alg.4 → Alg.5 (send/wait insertion), and the
+Alg.6/Fig.6 synchronization elimination, executing everything on real
+threads and validating against sequential semantics.
+"""
+
+from repro.core import (
+    StageGraph,
+    analyze,
+    fission,
+    paper_alg1,
+    paper_alg4,
+    paper_alg6,
+    parallelize,
+    plan_pipeline_sync,
+    run_threaded,
+)
+from repro.core.dependence import paper_alg4_dependences
+from repro.core.sync import insert_synchronization
+
+
+def main() -> None:
+    print("=" * 70)
+    print("1. Alg.1 -> Alg.2/3: dependence analysis + loop fission (Fig. 3)")
+    print("=" * 70)
+    prog = paper_alg1()
+    for d in analyze(prog):
+        print("  dep:", d.pretty())
+    res = fission(prog)
+    print("  fissioned loops:", res.loop_names(), "(paper: [S2],[S1,S4],[S3])")
+
+    print()
+    print("=" * 70)
+    print("2. Alg.4 -> Alg.5: send/wait synchronization (Fig. 5)")
+    print("=" * 70)
+    prog4 = paper_alg4()
+    sync = insert_synchronization(prog4, paper_alg4_dependences())
+    print(sync.pretty())
+    print()
+    print("  NOTE: our analyzer additionally finds", end=" ")
+    extra = [
+        d for d in analyze(prog4)
+        if (d.source, d.sink, d.array) == ("S2", "S1", "b")
+    ]
+    print(extra[0].pretty(), "- missing from the paper's Alg.5 (race demo in tests).")
+
+    print()
+    print("=" * 70)
+    print("3. Alg.6: synchronization elimination (Fig. 6)")
+    print("=" * 70)
+    rep = parallelize(paper_alg6(8), method="isd")
+    print("  summary:", rep.summary())
+    for dep, path in rep.elimination.witnesses.items():
+        chain = " -> ".join(f"{s}({i[0]})" for s, i in path)
+        print(f"  eliminated {dep.pretty()}")
+        print(f"  witness:   {chain}")
+    run = run_threaded(rep.optimized_sync, stalls={("S3", (1,)): 0.05})
+    print(
+        f"  threaded execution matches sequential: {run.matches_sequential} "
+        f"(waits={run.stats.waits}, sends={run.stats.sends})"
+    )
+
+    print()
+    print("=" * 70)
+    print("4. The same optimizer on a pipeline-parallel stage graph")
+    print("=" * 70)
+    plan = plan_pipeline_sync(
+        StageGraph(num_stages=6, num_microbatches=4, skips=((0, 2), (0, 3), (0, 4)))
+    )
+    print("  plan:", plan.summary())
+    print(
+        "  retained events:",
+        [(e.src_stmt, e.dst_stmt) for e in plan.events],
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill a prompt batch, then greedy-decode with
+the KV cache — the ``serve_step`` the decode dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral_8x7b --tokens 32
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2_2_7b --batch 8
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, get_smoke_config
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import model_zoo as zoo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="yi_6b", choices=ARCHITECTURES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = zoo.init(key, cfg)
+    max_len = args.prompt_len + args.tokens + (
+        cfg.num_patches if cfg.frontend == "vision" else 0
+    )
+
+    batch = {
+        "tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+        )
+    }
+    if cfg.family == "encdec":
+        batch["frame_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.encoder.num_frames, cfg.d_model)
+        )
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.num_patches, cfg.d_model)
+        )
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    serve = jax.jit(make_serve_step(cfg))
+
+    cache = zoo.init_cache(cfg, args.batch, max_len)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    cache_len = args.prompt_len + (
+        cfg.num_patches if cfg.frontend == "vision" else 0
+    )
+    generated = [cur]
+    t0 = time.perf_counter()
+    for t in range(args.tokens - 1):
+        cur, cache = serve(params, cur, cache, jnp.int32(cache_len))
+        cache_len += 1
+        generated.append(cur)
+    jax.block_until_ready(cur)
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    total = args.batch * args.tokens
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms")
+    print(
+        f"decode:  {args.tokens-1} steps in {t_decode*1e3:.1f} ms "
+        f"({total/max(t_decode,1e-9):.0f} tok/s batched, CPU interpret-scale)"
+    )
+    print("sample token ids:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

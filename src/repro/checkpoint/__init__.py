@@ -1,0 +1,1 @@
+"""Checkpointing: atomic step dirs, async writer, retention, resume."""

@@ -1,0 +1,201 @@
+"""Checkpointing: atomic step directories, async writer, retention, resume.
+
+Layout::
+
+    <root>/step_000123/
+        MANIFEST.json        # tree structure, shapes, dtypes, data state
+        arrays.npz           # flattened leaves (np arrays)
+    <root>/step_000123.tmp/  # write staging — renamed atomically on commit
+
+Restore picks the newest COMMITTED step (a crash mid-write leaves only a
+``.tmp`` directory, which is ignored and garbage-collected).  The async
+writer runs on a daemon thread with a bounded queue of one in-flight
+snapshot — the train loop never blocks on I/O unless two checkpoints are
+requested back-to-back (standard large-run behaviour).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import queue
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.data.pipeline import DataState
+
+# numpy's npz format round-trips extended dtypes (bfloat16 → void16) badly;
+# store them as a same-width integer view + the dtype name in the manifest
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8}
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def _encode(a: np.ndarray) -> Tuple[np.ndarray, str]:
+    name = a.dtype.name
+    if name in _VIEW_DTYPES:
+        return a.view(_VIEW_DTYPES[name]), name
+    return a, name
+
+
+def _decode(a: np.ndarray, name: str) -> np.ndarray:
+    if name in _VIEW_DTYPES:
+        return a.view(getattr(ml_dtypes, name))
+    return a
+
+
+@dataclasses.dataclass
+class Snapshot:
+    step: int
+    tree: Any
+    data_state: Optional[DataState] = None
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str | pathlib.Path,
+        *,
+        keep: int = 3,
+        async_writes: bool = True,
+    ) -> None:
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._async = async_writes
+        self._queue: "queue.Queue[Optional[Snapshot]]" = queue.Queue(maxsize=1)
+        self._errors: List[BaseException] = []
+        self._worker: Optional[threading.Thread] = None
+        if async_writes:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        self._gc_tmp()
+
+    # ------------------------------------------------------------------ #
+    def save(self, snap: Snapshot) -> None:
+        if self._async:
+            self._raise_pending()
+            self._queue.put(snap)  # blocks only if one write is in flight
+        else:
+            self._write(snap)
+
+    def wait(self) -> None:
+        """Block until all queued writes are committed (tests / shutdown)."""
+
+        if self._async:
+            self._queue.join()
+        self._raise_pending()
+
+    def restore(self, target: Any = None) -> Optional[Snapshot]:
+        """Newest committed snapshot, or None.
+
+        ``target``: example pytree defining the structure to restore into —
+        REQUIRED when the tree contains non-JSON containers (NamedTuples
+        like AdamWState); plain nested dicts restore without it."""
+
+        steps = self.committed_steps()
+        if not steps:
+            return None
+        return self.restore_step(steps[-1], target)
+
+    def restore_step(self, step: int, target: Any = None) -> Snapshot:
+        d = self.root / f"step_{step:09d}"
+        manifest = json.loads((d / "MANIFEST.json").read_text())
+        dtypes = manifest.get("dtypes")
+        with np.load(d / "arrays.npz") as z:
+            leaves = [
+                _decode(z[f"leaf_{i}"], dtypes[i] if dtypes else z[f"leaf_{i}"].dtype.name)
+                for i in range(manifest["num_leaves"])
+            ]
+        if target is not None:
+            treedef = jax.tree.structure(target)
+        else:
+            treedef = jax.tree.structure(
+                json.loads(manifest["treedef_example"]),
+                is_leaf=lambda x: x is None,
+            )
+        tree = jax.tree.unflatten(treedef, leaves)
+        ds = manifest.get("data_state")
+        return Snapshot(
+            step=manifest["step"],
+            tree=tree,
+            data_state=DataState(**ds) if ds else None,
+        )
+
+    def committed_steps(self) -> List[int]:
+        out = []
+        for d in self.root.iterdir():
+            if d.is_dir() and d.name.startswith("step_") and not d.name.endswith(".tmp"):
+                if (d / "MANIFEST.json").exists():
+                    out.append(int(d.name.split("_")[1]))
+        return sorted(out)
+
+    # ------------------------------------------------------------------ #
+    def _drain(self) -> None:
+        while True:
+            snap = self._queue.get()
+            if snap is None:
+                self._queue.task_done()
+                return
+            try:
+                self._write(snap)
+            except BaseException as e:  # noqa: BLE001
+                self._errors.append(e)
+            finally:
+                self._queue.task_done()
+
+    def _write(self, snap: Snapshot) -> None:
+        final = self.root / f"step_{snap.step:09d}"
+        tmp = self.root / f"step_{snap.step:09d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves, treedef = _flatten(snap.tree)
+        encoded = [_encode(a) for a in leaves]
+        np.savez(
+            tmp / "arrays.npz",
+            **{f"leaf_{i}": a for i, (a, _) in enumerate(encoded)},
+        )
+        # serialize tree structure via an example pytree of Nones
+        example = jax.tree.unflatten(treedef, [None] * len(leaves))
+        manifest = {
+            "step": snap.step,
+            "num_leaves": len(leaves),
+            "dtypes": [name for _, name in encoded],
+            "treedef_example": json.dumps(example),
+            "data_state": dataclasses.asdict(snap.data_state)
+            if snap.data_state
+            else None,
+        }
+        (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic commit
+        self._retain()
+
+    def _retain(self) -> None:
+        steps = self.committed_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.root / f"step_{s:09d}", ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        for d in self.root.glob("step_*.tmp"):
+            shutil.rmtree(d, ignore_errors=True)
+
+    def _raise_pending(self) -> None:
+        if self._errors:
+            raise self._errors.pop(0)
+
+    def close(self) -> None:
+        if self._async and self._worker is not None:
+            self._queue.put(None)
+            self._worker.join(timeout=10)

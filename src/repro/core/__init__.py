@@ -1,0 +1,74 @@
+"""Paper-faithful core: dependence analysis, loop parallelization, and
+producer/consumer synchronization optimization (Liao et al., 2012)."""
+
+from repro.core.dependence import ANTI, CONTROL, FLOW, OUTPUT, Dependence, analyze, loop_carried
+from repro.core.elimination import (
+    EliminationResult,
+    eliminate_pattern,
+    eliminate_transitive,
+    synchronized_set,
+)
+from repro.core.executor import run_threaded
+from repro.core.fission import FissionResult, fission
+from repro.core.ir import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    paper_alg1,
+    paper_alg4,
+    paper_alg6,
+    run_sequential,
+)
+from repro.core.isd import build_isd, isd_window, prime_factors
+from repro.core.parallelizer import ParallelizationReport, parallelize
+from repro.core.schedule import (
+    CommEvent,
+    PipelineSyncPlan,
+    StageGraph,
+    plan_pipeline_sync,
+)
+from repro.core.sync import (
+    Send,
+    SyncProgram,
+    Wait,
+    insert_synchronization,
+    strip_dependences,
+)
+
+__all__ = [
+    "ANTI",
+    "CONTROL",
+    "FLOW",
+    "OUTPUT",
+    "ArrayRef",
+    "CommEvent",
+    "Dependence",
+    "EliminationResult",
+    "FissionResult",
+    "LoopProgram",
+    "ParallelizationReport",
+    "PipelineSyncPlan",
+    "Send",
+    "StageGraph",
+    "Statement",
+    "SyncProgram",
+    "Wait",
+    "analyze",
+    "build_isd",
+    "eliminate_pattern",
+    "eliminate_transitive",
+    "fission",
+    "insert_synchronization",
+    "isd_window",
+    "loop_carried",
+    "paper_alg1",
+    "paper_alg4",
+    "paper_alg6",
+    "parallelize",
+    "plan_pipeline_sync",
+    "prime_factors",
+    "run_sequential",
+    "run_threaded",
+    "strip_dependences",
+    "synchronized_set",
+]

@@ -1,0 +1,258 @@
+"""Loop-program intermediate representation.
+
+The paper (§2–§4) operates on single loops (and rectangular loop nests) whose
+bodies are straight-line statements with affine array accesses ``a[i - d]``.
+This module defines that IR:
+
+  * :class:`ArrayRef`  — an access ``array[i + offset]`` (offset may be
+    negative; ``a[i-1]`` is ``ArrayRef("a", -1)``).
+  * :class:`Statement` — one statement ``S_k``: a single write plus a list of
+    reads and an opaque compute function used by the reference executors.
+  * :class:`LoopProgram` — ``for i = lo; i < hi; i++ { S1; ...; Sk }``.
+
+The IR is deliberately *executable*: both the sequential oracle and the
+multi-threaded send/wait executor (:mod:`repro.core.executor`) interpret it
+directly, so every transformation in :mod:`repro.core` can be checked for
+semantic equivalence, exactly in the paper's shared-memory setting.
+
+Multi-dimensional iteration spaces (used when the sync optimizer is lifted to
+(stage × microbatch) pipeline schedules, :mod:`repro.core.schedule`) reuse the
+same classes with tuple-valued offsets/distances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
+
+Offset = Union[int, Tuple[int, ...]]
+
+
+def _as_tuple(off: Offset) -> Tuple[int, ...]:
+    if isinstance(off, tuple):
+        return off
+    return (int(off),)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayRef:
+    """An affine access ``array[i + offset]`` (per-dimension for nests)."""
+
+    array: str
+    offset: Offset = 0
+
+    def offset_tuple(self) -> Tuple[int, ...]:
+        return _as_tuple(self.offset)
+
+    def __str__(self) -> str:  # pragma: no cover - debugging aid
+        offs = self.offset_tuple()
+        idx = ",".join(
+            f"i{k}{o:+d}" if o else f"i{k}" for k, o in enumerate(offs)
+        )
+        return f"{self.array}[{idx}]"
+
+
+ComputeFn = Callable[..., float]
+
+
+def _default_compute(*reads: float) -> float:
+    """Deterministic, order-sensitive combiner used when no compute is given.
+
+    It is intentionally non-commutative-ish (alternating add/sub with index
+    weights) so that executing statements in a wrong order produces wrong
+    values — silent reorder bugs cannot hide behind commutativity.
+    """
+
+    acc = 1.0
+    for k, r in enumerate(reads):
+        acc = acc + (r * (k + 1) if k % 2 == 0 else -r / (k + 2))
+    return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class Statement:
+    """``write.array[i+write.offset] = f(reads...)``.
+
+    ``name`` is the paper-style label (``"S1"``).  ``compute`` consumes the
+    read values (in ``reads`` order) and returns the value to store.
+
+    ``guard`` (optional) models the paper's control dependence δc (§2.1):
+    the statement executes only if the guard access is positive at run time
+    — e.g. ``guard=ArrayRef("p", -1)`` is ``if (p[i-1] > 0) S``.  The guard
+    read participates in dependence analysis like any read, and the δc edge
+    from the statement that *writes* the guard is emitted explicitly.
+    """
+
+    name: str
+    write: ArrayRef
+    reads: Tuple[ArrayRef, ...]
+    compute: ComputeFn = _default_compute
+    guard: Optional[ArrayRef] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "reads", tuple(self.reads))
+
+    def __str__(self) -> str:  # pragma: no cover - debugging aid
+        rhs = " , ".join(str(r) for r in self.reads) or "..."
+        return f"{self.name}: {self.write} <- f({rhs})"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopProgram:
+    """``for i in [lo, hi) { statements }`` (rectangular nest when ndim>1).
+
+    ``bounds`` is a sequence of (lo, hi) per loop dimension.  The paper's
+    examples are 1-D (``for i=1; i<n; i++``); the pipeline-schedule lift uses
+    2-D (stage, microbatch).
+    """
+
+    statements: Tuple[Statement, ...]
+    bounds: Tuple[Tuple[int, int], ...] = ((1, 8),)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "statements", tuple(self.statements))
+        object.__setattr__(
+            self, "bounds", tuple((int(lo), int(hi)) for lo, hi in self.bounds)
+        )
+        ndim = len(self.bounds)
+        for s in self.statements:
+            refs = (s.write, *s.reads) + ((s.guard,) if s.guard else ())
+            for ref in refs:
+                if len(ref.offset_tuple()) != ndim:
+                    raise ValueError(
+                        f"{s.name}: access {ref} has rank "
+                        f"{len(ref.offset_tuple())} but loop nest has rank {ndim}"
+                    )
+
+    # ------------------------------------------------------------------ #
+    @property
+    def ndim(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.statements)
+
+    def statement(self, name: str) -> Statement:
+        for s in self.statements:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def lexical_index(self, name: str) -> int:
+        for k, s in enumerate(self.statements):
+            if s.name == name:
+                return k
+        raise KeyError(name)
+
+    def arrays(self) -> Tuple[str, ...]:
+        seen = []
+        for s in self.statements:
+            refs = (s.write, *s.reads) + ((s.guard,) if s.guard else ())
+            for ref in refs:
+                if ref.array not in seen:
+                    seen.append(ref.array)
+        return tuple(seen)
+
+    def iterations(self) -> Sequence[Tuple[int, ...]]:
+        """All iteration points in lexicographic (sequential) order."""
+
+        pts: list[Tuple[int, ...]] = [()]
+        for lo, hi in self.bounds:
+            pts = [p + (i,) for p in pts for i in range(lo, hi)]
+        return pts
+
+    # ------------------------------------------------------------------ #
+    def initial_store(self, pad: int = 8) -> dict:
+        """A deterministic initial memory image covering all accesses.
+
+        Arrays are dense dicts ``{index_tuple: value}`` padded ``pad`` cells
+        beyond the loop bounds on each side so that out-of-iteration reads
+        (``b[i-2]`` at ``i=1``) hit initialized memory, as in Fortran dusty
+        decks where arrays are pre-initialized.
+        """
+
+        store: dict = {}
+        for arr in self.arrays():
+            cells: dict = {}
+            ranges = [range(lo - pad, hi + pad) for lo, hi in self.bounds]
+            idxs: list[Tuple[int, ...]] = [()]
+            for r in ranges:
+                idxs = [p + (i,) for p in idxs for i in r]
+            for idx in idxs:
+                # deterministic pseudo-random-ish initial content
+                h = hash((arr, idx)) % 1000003
+                cells[idx] = (h % 97) / 7.0 - 5.0
+            store[arr] = cells
+        return store
+
+
+def run_sequential(prog: LoopProgram, store: Mapping[str, dict] | None = None) -> dict:
+    """Execute ``prog`` exactly as written, sequentially.  The oracle."""
+
+    mem = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
+    for point in prog.iterations():
+        for s in prog.statements:
+            if s.guard is not None:
+                gidx = tuple(
+                    p + o for p, o in zip(point, s.guard.offset_tuple())
+                )
+                if not mem[s.guard.array][gidx] > 0:
+                    continue
+            reads = [
+                mem[r.array][tuple(p + o for p, o in zip(point, r.offset_tuple()))]
+                for r in s.reads
+            ]
+            widx = tuple(p + o for p, o in zip(point, s.write.offset_tuple()))
+            mem[s.write.array][widx] = s.compute(*reads)
+    return mem
+
+
+# ---------------------------------------------------------------------- #
+# The paper's didactic programs (Algorithms 1, 4 and 6).
+# ---------------------------------------------------------------------- #
+
+def paper_alg1(n: int = 8) -> LoopProgram:
+    """Alg. 1: the acyclic-dependence example (Fig. 3a)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -1),)),
+            Statement("S2", ArrayRef("b", 0), (ArrayRef("c", -1),)),
+            Statement(
+                "S3",
+                ArrayRef("t", 0),
+                (ArrayRef("a", -1), ArrayRef("b", 0), ArrayRef("d", -2)),
+            ),
+            Statement("S4", ArrayRef("d", 0), (ArrayRef("b", -2),)),
+        ),
+        bounds=((1, n),),
+    )
+
+
+def paper_alg4(n: int = 8) -> LoopProgram:
+    """Alg. 4: the cross-iteration cyclic example (Fig. 5)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -1),)),
+            Statement("S2", ArrayRef("b", 0), (ArrayRef("c", -1),)),
+            Statement(
+                "S3", ArrayRef("c", 0), (ArrayRef("b", -2), ArrayRef("a", -1))
+            ),
+        ),
+        bounds=((1, n),),
+    )
+
+
+def paper_alg6(n: int = 8) -> LoopProgram:
+    """Alg. 6: the synchronization-elimination example (Fig. 6)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", 0), ()),
+            Statement("S2", ArrayRef("b", 0), (ArrayRef("c", -1),)),
+            Statement("S3", ArrayRef("c", 0), (ArrayRef("a", -2),)),
+        ),
+        bounds=((1, n),),
+    )

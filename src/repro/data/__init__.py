@@ -1,0 +1,1 @@
+"""Data substrate: deterministic synthetic sharded token pipeline."""

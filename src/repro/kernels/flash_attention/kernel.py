@@ -1,0 +1,161 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Blocked streaming-softmax attention with explicit BlockSpec VMEM tiling:
+grid = (batch·heads, Sq/BLK_Q, Sk/BLK_K), K as the innermost ("arbitrary")
+dimension so the automatic Pallas pipeline double-buffers the K/V tiles —
+the hardware producer (DMA) / consumer (MXU) pair whose synchronization
+schedule is exactly the paper's send/wait structure (see
+``repro.kernels.pipelined_matmul.schedule`` for the derivation; the minimal
+retained dependence set implies double buffering, which is what
+``pl.pallas_call``'s pipelining emits).
+
+Running max/sum/accumulator live in VMEM scratch across K-steps; the output
+tile is written once at the last K-step.  Causal and sliding-window masking
+are applied from block-index arithmetic; fully-masked K-blocks are skipped
+via ``pl.when`` (the compute-side elimination of provably-unneeded work).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, BLK_Q, hd)
+    k_ref,  # (1, BLK_K, hd)
+    v_ref,  # (1, BLK_K, hd)
+    o_ref,  # (1, BLK_Q, hd)
+    m_scratch,  # (BLK_Q, 1) f32
+    l_scratch,  # (BLK_Q, 1) f32
+    acc_scratch,  # (BLK_Q, hd) f32
+    *,
+    blk_q: int,
+    blk_k: int,
+    sq: int,
+    sk: int,
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+
+    # block-level skip: K-block entirely after the causal frontier or
+    # entirely before the sliding window
+    run = jnp.asarray(True)
+    if causal:
+        run &= ki * blk_k <= qi * blk_q + blk_q - 1
+    if window is not None:
+        run &= (ki + 1) * blk_k - 1 > qi * blk_q - window
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BLK_Q, BLK_K)
+
+        mask = (q_pos < sq) & (k_pos < sk)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]  # (BLK_Q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_scratch[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scratch[...] = acc_scratch[...] * corr + pv
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,  # (BH, Sk, hd)
+    v: jax.Array,  # (BH, Sk, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    nq = -(-Sq // blk_q)
+    nk = -(-Sk // blk_k)
+
+    # pad to block multiples (masked out inside the kernel)
+    if nq * blk_q != Sq:
+        q = jnp.pad(q, ((0, 0), (0, nq * blk_q - Sq), (0, 0)))
+    if nk * blk_k != Sk:
+        k = jnp.pad(k, ((0, 0), (0, nk * blk_k - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, nk * blk_k - Sk), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        sq=Sq,
+        sk=Sk,
+        causal=causal,
+        window=window,
+        scale=hd**-0.5,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * blk_q, hd), q.dtype),
+        scratch_shapes=[
+            # running max / sum / accumulator live in VMEM across K-steps
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq, :]

@@ -1,0 +1,56 @@
+"""jit'd public wrapper: GQA-aware flash attention over (B, S, H, hd).
+
+Folds (batch, heads) into the kernel's leading grid dimension, expands GQA
+KV heads, and dispatches to the Pallas kernel (interpret=True on CPU — the
+container has no TPU; the kernel is written for TPU BlockSpec tiling and
+validated against ``ref.py``)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, v.shape[1], hd)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    of = flash_attention_kernel(
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        interpret=interp,
+    )
+    return of.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

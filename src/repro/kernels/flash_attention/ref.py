@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,  # (BH, Sk, hd)
+    v: jax.Array,  # (BH, Sk, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    s = jnp.einsum("bqk,bsk->bqs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * hd**-0.5
+    Sq, Sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsk->bqk", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the pipelined matmul (interpret on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.pipelined_matmul.kernel import pipelined_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("blk_m", "blk_n", "blk_k", "interpret")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    blk_m: int = 128,
+    blk_n: int = 128,
+    blk_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return pipelined_matmul(
+        a, b, blk_m=blk_m, blk_n=blk_n, blk_k=blk_k, interpret=interp
+    )

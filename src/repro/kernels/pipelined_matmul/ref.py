@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the pipelined matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(a.dtype)

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+MUST be the process entry point (``python -m repro.launch.dryrun``): the
+XLA_FLAGS assignment above runs before any other import so the 512
+placeholder host devices exist before jax initializes.  Smoke tests and
+benches never import this module.
+
+Per cell it records, into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``:
+  * compile wall time, memory_analysis (bytes/device), cost_analysis
+    (FLOPs, bytes accessed),
+  * collective op counts + ICI traffic (parsed from the optimized HLO),
+  * the roofline terms of EXPERIMENTS.md §Roofline.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCHITECTURES,
+    SHAPES,
+    cell_is_applicable,
+    get_config,
+    shape_by_name,
+)
+from repro.launch import hlo_analysis, input_specs, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model_zoo as zoo  # noqa: E402
+from repro.optim.optimizer import AdamW  # noqa: E402
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _cost_get(cost: dict, key: str) -> float:
+    try:
+        return float(cost.get(key, 0.0))
+    except Exception:
+        return 0.0
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(m, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(m, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(m, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(m, "alias_size_in_bytes", 0)),
+            "code_bytes": int(getattr(m, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: pathlib.Path,
+    microbatches: int = 8,
+    kv_quant: bool = False,
+) -> dict:
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_is_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record: dict = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "kv_quant": kv_quant,
+    }
+    if not ok:
+        record["skipped"] = why
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fname = f"{cfg.name}__{shape_name}__{mesh_name}.json".replace("/", "_")
+        (out_dir / fname).write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    opt = AdamW()
+    cell = input_specs.cell_shardings(cfg, shape, mesh, opt)
+
+    record["microbatches"] = microbatches if shape.kind == "train" else None
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            # deployment compile (microbatched, donated buffers) for the
+            # memory-fit proof; XLA's cost model loses trip counts on nested
+            # scans, so the cost/roofline compile below uses microbatches=1.
+            fn = steps.make_train_step(
+                cfg, opt, microbatches=microbatches, mesh=mesh,
+                grad_shardings=cell.get("grad_shardings"),
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(cell["params"], cell["opt_state"], cell["batch"]),
+                out_shardings=(cell["params"], cell["opt_state"], None),
+                donate_argnums=(0, 1),
+            )
+            mem_compiled = jitted.lower(
+                cell["params_abstract"],
+                cell["opt_state_abstract"],
+                cell["batch_abstract"],
+            ).compile()
+            record["memory_deploy"] = _memory_dict(mem_compiled)
+            del mem_compiled
+
+            fn = steps.make_train_step(
+                cfg, opt, microbatches=1, mesh=mesh,
+                grad_shardings=cell.get("grad_shardings"),
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(cell["params"], cell["opt_state"], cell["batch"]),
+                out_shardings=(cell["params"], cell["opt_state"], None),
+            )
+            lowered = jitted.lower(
+                cell["params_abstract"],
+                cell["opt_state_abstract"],
+                cell["batch_abstract"],
+            )
+        elif shape.kind == "prefill":
+            fn = steps.make_prefill_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(cell["params"], cell["batch"], cell["cache"]),
+                out_shardings=(None, cell["cache"]),
+                donate_argnums=(2,),  # cache updated in place (serving)
+            )
+            lowered = jitted.lower(
+                cell["params_abstract"],
+                cell["batch_abstract"],
+                cell["cache_abstract"],
+            )
+        else:  # decode
+            fn = steps.make_serve_step(cfg)
+            tokens, cache_abs, cl = input_specs.decode_inputs(cfg, shape)
+            tok_shard = NamedSharding(mesh, P(None, None))
+            bdim = tokens.shape[0]
+            from repro.launch.sharding import _pick
+            from repro.launch.mesh import data_axes
+
+            b_axis = _pick(mesh, bdim, data_axes(mesh), "data")
+            tok_shard = NamedSharding(mesh, P(b_axis, None))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    cell["params"],
+                    tok_shard,
+                    cell["cache"],
+                    NamedSharding(mesh, P()),
+                ),
+                out_shardings=(tok_shard, cell["cache"]),
+                donate_argnums=(2,),  # cache updated in place (serving)
+            )
+            lowered = jitted.lower(
+                cell["params_abstract"], tokens, cell["cache_abstract"], cl
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = _memory_dict(compiled)
+    print(f"[{cfg.name} × {shape_name} × {mesh_name}] memory_analysis:", mem)
+    try:
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    except Exception as e:
+        cost = {"error": repr(e)}
+    flops = _cost_get(cost, "flops")
+    bytes_accessed = _cost_get(cost, "bytes accessed")
+    print(
+        f"[{cfg.name} × {shape_name} × {mesh_name}] cost_analysis: "
+        f"flops/chip={flops:.3e} bytes/chip={bytes_accessed:.3e}"
+    )
+
+    coll = hlo_analysis.parse_collectives(compiled.as_text())
+
+    # MODEL_FLOPS: 6·N_active per token × tokens in the step (train counts
+    # fwd+bwd via the 6× convention; decode/prefill use 2·N_active — fwd only)
+    n_active = _active_params(cfg)
+    if shape.kind == "train":
+        tokens_per_step = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens_per_step
+    elif shape.kind == "prefill":
+        tokens_per_step = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens_per_step
+    else:
+        tokens_per_step = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * n_active * tokens_per_step
+
+    terms = hlo_analysis.roofline(
+        flops_per_chip=flops,
+        bytes_per_chip=bytes_accessed,
+        collective_bytes_per_chip=coll.tpu_adjusted_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+    # analytic floors (XLA:CPU cost analysis mis-scales scan trip counts —
+    # report both; see EXPERIMENTS.md §Roofline for the methodology note)
+    from repro.launch import analytic
+
+    n_params = _total_params(cfg)
+    ana = analytic.analytic_record(
+        cfg, shape, n_params, n_active, chips, microbatches
+    )
+    ana_terms = hlo_analysis.roofline(
+        flops_per_chip=ana["flops_per_chip"],
+        bytes_per_chip=ana["bytes_per_chip"],
+        collective_bytes_per_chip=coll.tpu_adjusted_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+    record.update(
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        chips=chips,
+        memory=mem,
+        cost={"flops_per_chip": flops, "bytes_per_chip": bytes_accessed},
+        collectives=coll.as_dict(),
+        n_active_params=n_active,
+        n_total_params=n_params,
+        tokens_per_step=tokens_per_step,
+        roofline=terms.as_dict(),
+        analytic=ana,
+        roofline_analytic=ana_terms.as_dict(),
+    )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = f"{cfg.name}__{shape_name}__{mesh_name}.json".replace("/", "_")
+    (out_dir / fname).write_text(json.dumps(record, indent=2))
+    print(
+        f"[{cfg.name} × {shape_name} × {mesh_name}] roofline(hlo): "
+        f"compute={terms.compute_s:.4f}s memory={terms.memory_s:.4f}s "
+        f"collective={terms.collective_s:.4f}s dominant={terms.dominant} "
+        f"mfu={terms.mfu:.3f} (compile {t_compile:.1f}s)"
+    )
+    print(
+        f"[{cfg.name} × {shape_name} × {mesh_name}] roofline(analytic): "
+        f"compute={ana_terms.compute_s:.4f}s memory={ana_terms.memory_s:.4f}s "
+        f"collective={ana_terms.collective_s:.4f}s dominant={ana_terms.dominant} "
+        f"mfu={ana_terms.mfu:.3f}"
+    )
+    return record
+
+
+def _total_params(cfg) -> int:
+    import numpy as np
+
+    shapes = zoo.abstract_params(cfg)
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def _active_params(cfg) -> int:
+    shapes = zoo.abstract_params(cfg)
+    import numpy as np
+
+    frac = cfg.moe.top_k / cfg.moe.num_experts if cfg.has_moe else 1.0
+
+    def walk(tree, routed):
+        n = 0
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k == "moe":
+                    for kk, vv in v.items():
+                        size = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(vv))
+                        n += int(size * frac) if kk in ("w_gate", "w_up", "w_down") else size
+                else:
+                    n += walk(v, routed)
+        else:
+            n += sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+        return n
+
+    return walk(shapes, False)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (or 'all')")
+    ap.add_argument("--shape", default=None, help="shape name (or 'all')")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (optimized serving variant)")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    archs = ARCHITECTURES if args.arch in (None, "all") else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape_name, mp, out_dir, args.microbatches, args.kv_quant)
+                except Exception:
+                    failures.append((arch, shape_name, mp))
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run: all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

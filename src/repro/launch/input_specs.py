@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation — everything is abstract (``jax.eval_shape`` for param
+and cache trees), sharded with the rules in :mod:`repro.launch.sharding`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as shard_lib
+from repro.models import model_zoo as zoo
+from repro.optim.optimizer import AdamW
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract training/prefill batch for the cell."""
+
+    B, S = shape.global_batch, shape.seq_len
+    d = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "encdec":
+        specs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.num_frames, cfg.d_model), d
+        )
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif cfg.frontend == "vision":
+        # patch prefix + text fill the assigned sequence length
+        text = S - cfg.num_patches
+        assert text > 0
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), d
+        )
+        specs["tokens"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, jnp.int32)
+    return specs
+
+
+def abstract_state(cfg: ModelConfig, opt: AdamW):
+    params = zoo.abstract_params(cfg)
+    opt_state = jax.eval_shape(lambda p: opt.init(p), params)
+    return params, opt_state
+
+
+def decode_inputs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Tuple[jax.ShapeDtypeStruct, Any, jax.ShapeDtypeStruct]:
+    """(tokens, cache, cache_len) stand-ins for a decode cell: one new token
+    against a KV cache filled to seq_len."""
+
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = zoo.abstract_cache(cfg, B, S)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache, cache_len
+
+
+def cell_shardings(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    opt: AdamW,
+):
+    """All in/out shardings for the cell's step function.
+
+    Returns a dict with 'params', 'opt_state', 'batch', 'cache', etc. as
+    NamedSharding pytrees.
+    """
+
+    out: Dict[str, Any] = {}
+    params = zoo.abstract_params(cfg)
+
+    # parameters: tensor-parallel resident (XLA:CPU hoists FSDP all-gathers
+    # out of the block scan, exploding temp memory — measured 120-550 GB —
+    # so full ZeRO-3 params stay a TPU-only option; see EXPERIMENTS.md §Perf)
+    pspec = shard_lib.params_pspecs(cfg, mesh, params)
+    out["params_abstract"] = params
+    out["params"] = shard_lib.named(mesh, pspec)
+
+    if shape.kind == "train":
+        # ZeRO-1: optimizer moments shard over 'data' on top of the
+        # tensor-parallel specs; step is a replicated scalar
+        from repro.optim.optimizer import AdamWState
+
+        zspec = shard_lib.zero1_pspecs(cfg, mesh, params)
+        opt_state = jax.eval_shape(lambda p: opt.init(p), params)
+        ospec = AdamWState(step=P(), mu=zspec, nu=zspec)
+        out["opt_state_abstract"] = opt_state
+        out["opt_state"] = shard_lib.named(mesh, ospec)
+        out["grad_shardings"] = shard_lib.named(mesh, zspec)
+
+    b = batch_specs(cfg, shape)
+    out["batch_abstract"] = b
+    out["batch"] = shard_lib.named(mesh, shard_lib.batch_pspecs(cfg, mesh, b))
+
+    if shape.kind in ("prefill", "decode"):
+        cache = zoo.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        out["cache_abstract"] = cache
+        out["cache"] = shard_lib.named(
+            mesh, shard_lib.cache_pspecs(cfg, mesh, cache)
+        )
+    return out

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests and benches must keep seeing a
+single CPU device; only ``dryrun.py`` forces 512 host devices.
+
+Mesh geometry (TPU v5e-class pods):
+  * single pod: (16, 16)   axes ("data", "model")    — 256 chips
+  * multi pod:  (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+Data parallelism runs over ("pod", "data") — the pod axis only ever carries
+DP gradient all-reduces (DCN-friendly), while "model" (tensor/expert
+parallel) stays inside the pod's ICI, which is the standard 1000+-node
+layout: scale pods out on the slow axis, keep collectives-heavy sharding on
+the fast axis.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """A small mesh over however many local devices exist (tests)."""
+
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def data_parallel_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,263 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs per (config, mesh).
+
+MaxText-style logical rules resolved against the concrete mesh: an axis gets
+a mesh axis only when the dimension size divides the mesh axis size —
+otherwise the next candidate (or replication) applies.  This is what makes
+one rule set serve GQA models whose kv_heads (4, 8, 16) may or may not
+divide the 16-way model axis, MoE models with 8/16/64 experts, and the
+long-context decode cells where the KV-cache *sequence* dimension takes the
+spare mesh axes (flash-decoding layout).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import data_axes, model_axis_size
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _pick(mesh: Mesh, dim: int, *candidates):
+    """First candidate mesh axis (or tuple) that divides ``dim``."""
+
+    for c in candidates:
+        if c is None:
+            continue
+        if _fits(dim, _axis_size(mesh, c)):
+            return c
+    return None
+
+
+# ---------------------------------------------------------------------- #
+# parameters
+# ---------------------------------------------------------------------- #
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+
+    m = "model"
+    ms = model_axis_size(mesh)
+    name = path[-1]
+    stacked = any(p in ("blocks", "enc_blocks", "dec_blocks") for p in path)
+    lead: Tuple[Optional[str], ...] = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    # shared experts are a plain dense MLP (not expert-stacked)
+    in_moe = "moe" in path and "shared" not in path
+    in_mamba = "mamba" in path
+
+    if name == "tok":  # (V, d)
+        return spec(_pick(mesh, body[0], m), None)
+    if name == "head":  # (d, V)
+        return spec(None, _pick(mesh, body[1], m))
+    if name in ("wq",):  # (d, H, hd)
+        return spec(None, _pick(mesh, body[1], m), None)
+    if name in ("wk", "wv"):  # (d, KV, hd)
+        return spec(None, _pick(mesh, body[1], m), None)
+    if name == "wo":  # (H, hd, d)
+        return spec(_pick(mesh, body[0], m), None, None)
+    if in_moe and name in ("w_gate", "w_up"):  # (E, d, ff)
+        mode = cfg.moe.shard if cfg.moe else "auto"
+        if mode != "tp" and _fits(body[0], ms):
+            return spec(m, None, None)          # expert-parallel
+        return spec(None, None, _pick(mesh, body[2], m))  # TP within experts
+    if in_moe and name == "w_down":  # (E, ff, d)
+        mode = cfg.moe.shard if cfg.moe else "auto"
+        if mode != "tp" and _fits(body[0], ms):
+            return spec(m, None, None)
+        return spec(None, _pick(mesh, body[1], m), None)
+    if name == "router":  # (d, E)
+        return spec(None, None)
+    if name in ("w_gate", "w_up"):  # dense mlp (d, ff)
+        return spec(None, _pick(mesh, body[1], m))
+    if name == "w_down":  # (ff, d)
+        return spec(_pick(mesh, body[0], m), None)
+    if in_mamba and name in ("wz", "wx"):  # (d, di)
+        return spec(None, _pick(mesh, body[1], m))
+    if in_mamba and name == "wdt":  # (d, H)
+        return spec(None, _pick(mesh, body[1], m))
+    if in_mamba and name in ("wB", "wC"):  # (d, G*N) — small, replicate
+        return spec(None, None)
+    if in_mamba and name == "out":  # (di, d)
+        return spec(_pick(mesh, body[0], m), None)
+    if in_mamba and name == "conv_x":  # (K, di)
+        return spec(None, _pick(mesh, body[1], m))
+    if in_mamba and name in ("A_log", "D", "dt_bias"):  # (H,)
+        return spec(_pick(mesh, body[0], m))
+    if in_mamba and name == "norm":  # (di,)
+        return spec(_pick(mesh, body[0], m))
+    # norms / scalars: replicated
+    return spec(*(None,) * len(body))
+
+
+def params_pspecs(cfg: ModelConfig, mesh: Mesh, params_shapes: Any):
+    """PartitionSpec pytree matching an (abstract) params tree."""
+
+    def walk(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        return param_spec(names, tuple(leaf.shape), cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shapes)
+
+
+def fsdp_pspecs(cfg: ModelConfig, mesh: Mesh, params_shapes: Any):
+    """FSDP/ZeRO sharding: the parameter spec plus the 'data' axis on the
+    first still-unsharded *weight* dimension that divides it.  Used for the
+    training cells' parameters AND optimizer moments: cuts per-chip
+    parameter, moment and gradient-accumulator residency by the DP degree —
+    required to fit the 27B+ archs on 16 GB chips.  XLA inserts the
+    per-block all-gather (fwd/bwd) and reduce-scatter (grad) traffic
+    automatically from the sharding mismatch.
+
+    The leading stack dimension of scanned block parameters is never
+    sharded — slicing a scan's xs along a sharded axis would serialize every
+    iteration through one chip's memory.
+    """
+
+    if "data" not in mesh.axis_names:
+        return params_pspecs(cfg, mesh, params_shapes)
+    ds = mesh.shape["data"]
+
+    def walk(path, leaf):
+        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        base = param_spec(names, tuple(leaf.shape), cfg, mesh)
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        stacked = any(
+            p in ("blocks", "enc_blocks", "dec_blocks") for p in names
+        )
+        start = 1 if stacked else 0
+        for i in range(start, len(leaf.shape)):
+            dim, ax = leaf.shape[i], spec[i]
+            if ax is None and dim % ds == 0 and dim >= ds:
+                spec[i] = "data"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shapes)
+
+
+# backwards-compatible alias (moments-only use)
+zero1_pspecs = fsdp_pspecs
+
+
+# ---------------------------------------------------------------------- #
+# batches
+# ---------------------------------------------------------------------- #
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_shapes: Any):
+    dp = data_axes(mesh)
+
+    def walk(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        bdim = leaf.shape[0]
+        b = _pick(mesh, bdim, dp, "data")
+        rest = (None,) * (len(leaf.shape) - 1)
+        return P(b, *rest)
+
+    return jax.tree_util.tree_map_with_path(walk, batch_shapes)
+
+
+# ---------------------------------------------------------------------- #
+# KV / state caches
+# ---------------------------------------------------------------------- #
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shapes: Any):
+    """Cache sharding: batch→data when divisible; kv_heads→model when
+    divisible, else the sequence dim takes the model axis (flash-decoding);
+    with batch=1 (long-context) the sequence dim takes every leftover axis."""
+
+    dp = data_axes(mesh)
+
+    def walk(path, leaf):
+        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        name = names[-1]
+        # stacked caches: scan-over-blocks (decoder) or the enc-dec cache
+        # whose leaves are (L, B, S, KV, hd) without a 'blocks' path entry
+        kv_names = ("k", "v", "ck", "cv", "k_q", "v_q", "k_s", "v_s")
+        stacked = "blocks" in names or (
+            name in kv_names and leaf.ndim == 5
+        ) or (name == "ssm" and leaf.ndim == 5) or (
+            name == "conv" and leaf.ndim == 4
+        )
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        lead = (None,) if stacked else ()
+
+        if name in kv_names:  # (B, S, KV, hd|1)
+            Bdim, Sdim, KV, hd = shape
+            b = _pick(mesh, Bdim, dp, "data")
+            kvh = _pick(mesh, KV, "model")
+            seq_axes = []
+            if b is None:
+                seq_axes.extend(dp)
+            if kvh is None:
+                seq_axes.append("model")
+            s = _pick(mesh, Sdim, tuple(seq_axes) if seq_axes else None)
+            return P(*lead, b, s, kvh, None)
+        if name == "ssm":  # (B, H, P, N)
+            Bdim, H = shape[0], shape[1]
+            b = _pick(mesh, Bdim, dp, "data")
+            h = _pick(mesh, H, "model")
+            return P(*lead, b, h, None, None)
+        if name == "conv":  # (B, K-1, di)
+            Bdim, _, di = shape
+            b = _pick(mesh, Bdim, dp, "data")
+            return P(*lead, b, None, _pick(mesh, di, "model"))
+        return P(*lead, *(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_shapes)
+
+
+# ---------------------------------------------------------------------- #
+# helpers
+# ---------------------------------------------------------------------- #
+
+def named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def validate_divisibility(pspec_tree, shapes_tree, mesh: Mesh) -> list:
+    """Return a list of (path, shape, spec) that do NOT divide — must be
+    empty before lowering (tested)."""
+
+    bad = []
+
+    def walk(path, spec, leaf):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            if dim % _axis_size(mesh, ax) != 0:
+                bad.append((jax.tree_util.keystr(path), leaf.shape, spec))
+
+    jax.tree_util.tree_map_with_path(
+        walk, pspec_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return bad

@@ -1,0 +1,1 @@
+"""Model substrate: layers, attention, MoE, Mamba2, decoder/enc-dec stacks."""

@@ -1,0 +1,242 @@
+"""Whisper-style encoder–decoder backbone.
+
+The conv/mel audio frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, F, d_model).  The encoder is a
+bidirectional transformer over frames; the decoder adds cross-attention to
+the encoder output.  Cross-attention K/V are computed once at prefill and
+cached (they never change during decode) — one of the dependences the
+pipeline sync planner recognizes as coverable by the stage chain.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.layers import (
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------- #
+# init
+# ---------------------------------------------------------------------- #
+
+def _enc_layer_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "attn": attn_lib.attn_init(k1, cfg),
+        "norm2": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _dec_layer_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "self_attn": attn_lib.attn_init(k1, cfg),
+        "norm_x": rmsnorm_init(cfg.d_model),
+        "cross_attn": attn_lib.attn_init(k2, cfg),
+        "norm2": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> dict:
+    assert cfg.encoder is not None
+    ke, kd, kt, kn = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder.num_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": embed_init(kt, cfg),
+        "enc_blocks": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": rmsnorm_init(cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# encoder
+# ---------------------------------------------------------------------- #
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames (B,F,d) — stubbed conv-frontend output.  Bidirectional stack."""
+
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)[None]
+
+    def body(xc, lp):
+        h = rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+        q, k, v = attn_lib.qkv_project(lp["attn"], h)
+        o = attn_lib.chunked_attention(
+            q, k, v, causal=False, chunk=cfg.attn_chunk
+        )
+        xc = xc + attn_lib.out_project(lp["attn"], o)
+        h = rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+        return xc + mlp(lp["mlp"], h), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------- #
+# decoder
+# ---------------------------------------------------------------------- #
+
+def _dec_layer(
+    lp: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    cache: Optional[dict],
+    cache_len: Optional[jax.Array],
+    enc_out: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[dict]]:
+    # self attention
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    q, k, v = attn_lib.qkv_project(lp["self_attn"], h)
+    positions = (
+        cache_len.reshape(1) if mode == "decode" else jnp.arange(x.shape[1])
+    )
+    q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+    k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = dict(cache) if cache is not None else None
+    if mode == "decode":
+        kc, vc = attn_lib.update_kv_cache(cache["k"], cache["v"], k, v, cache_len)
+        new_cache["k"], new_cache["v"] = kc, vc
+        o = attn_lib.decode_attention(q, kc, vc, cache_len + 1)
+    else:
+        if cache is not None:  # prefill
+            kc, vc = attn_lib.update_kv_cache(cache["k"], cache["v"], k, v, 0)
+            new_cache["k"], new_cache["v"] = kc, vc
+        o = attn_lib.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    x = x + attn_lib.out_project(lp["self_attn"], o)
+
+    # cross attention
+    h = rmsnorm(lp["norm_x"], x, cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+    if mode == "decode":
+        ck, cv = cache["ck"], cache["cv"]
+    else:
+        assert enc_out is not None
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+        if new_cache is not None:
+            new_cache["ck"], new_cache["cv"] = (
+                ck.astype(new_cache["ck"].dtype),
+                cv.astype(new_cache["cv"].dtype),
+            )
+    o = attn_lib.chunked_attention(qx, ck, cv, causal=False, chunk=cfg.attn_chunk)
+    x = x + attn_lib.out_project(lp["cross_attn"], o)
+
+    # mlp
+    h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    x = x + mlp(lp["mlp"], h)
+    return x, new_cache
+
+
+def _run_decoder(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    cache: Optional[dict],
+    cache_len: Optional[jax.Array],
+    enc_out: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[dict]]:
+    def body(carry, inputs):
+        xc = carry
+        if cache is not None:
+            lp, lc = inputs
+        else:
+            lp, lc = inputs, None
+        xc, nlc = _dec_layer(lp, xc, cfg, mode, lc, cache_len, enc_out)
+        return xc, nlc
+
+    if mode == "train" and cfg.remat != "none":
+        body = jax.checkpoint(body)
+    xs = (params["dec_blocks"], cache) if cache is not None else params["dec_blocks"]
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, (new_cache if cache is not None else None)
+
+
+# ---------------------------------------------------------------------- #
+# public API
+# ---------------------------------------------------------------------- #
+
+def forward(
+    params: dict, frames: jax.Array, tokens: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: (logits (B,S,V), aux=0)."""
+
+    enc_out = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x, _ = _run_decoder(params, x, cfg, "train", None, None, enc_out)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    assert cfg.encoder is not None
+    L = cfg.num_layers
+    kv = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    xkv = (batch, cfg.encoder.num_frames, cfg.num_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    one = {
+        "k": jnp.zeros(kv, dt),
+        "v": jnp.zeros(kv, dt),
+        "ck": jnp.zeros(xkv, dt),
+        "cv": jnp.zeros(xkv, dt),
+    }
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one
+    )
+
+
+def prefill(
+    params: dict,
+    frames: jax.Array,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+) -> Tuple[jax.Array, dict]:
+    enc_out = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x, new_cache = _run_decoder(params, x, cfg, "prefill", cache, None, enc_out)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), new_cache
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    cache_len: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x, new_cache = _run_decoder(params, x, cfg, "decode", cache, cache_len, None)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), new_cache

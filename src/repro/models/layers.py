@@ -1,0 +1,133 @@
+"""Primitive layers: RMSNorm, rotary embeddings, token embedding, SwiGLU MLP.
+
+Pure-functional: every layer is ``init(key, cfg) -> params`` plus
+``apply(params, x, ...) -> y`` over plain dict pytrees.  All compute runs in
+``cfg.dtype`` (bf16 by default) with fp32 accumulations where it matters
+(norm statistics, softmax, losses)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# RMSNorm
+# ---------------------------------------------------------------------- #
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Rotary position embeddings
+# ---------------------------------------------------------------------- #
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # (head_dim/2,)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (...,S,1,hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Embedding / unembedding
+# ---------------------------------------------------------------------- #
+
+def embed_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    V = cfg.padded_vocab_size
+    emb = jax.random.normal(key, (V, cfg.d_model), jnp.float32)
+    params = {"tok": (emb * 0.02).astype(cdtype(cfg))}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        head = jax.random.normal(k2, (cfg.d_model, V), jnp.float32)
+        params["head"] = (head * 0.02).astype(cdtype(cfg))
+    return params
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits over the PADDED vocab; padded positions masked to -inf so they
+    never win argmax and carry ~0 softmax mass."""
+
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["tok"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"])
+    V, Vp = cfg.vocab_size, cfg.padded_vocab_size
+    if Vp != V:
+        valid = jnp.arange(Vp) < V
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------- #
+# SwiGLU MLP
+# ---------------------------------------------------------------------- #
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("...f,fd->...d", act, params["w_down"])
+
+
+# ---------------------------------------------------------------------- #
+# losses
+# ---------------------------------------------------------------------- #
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Mean next-token loss in fp32.  logits (..., V), labels (...) int."""
+
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

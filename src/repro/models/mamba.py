@@ -1,0 +1,268 @@
+"""Mamba2 (state-space duality) mixer — chunked SSD prefill + O(1) decode.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; intra-chunk terms are dense matmuls (MXU-friendly — this
+is the whole point of SSD on TPU), inter-chunk state is carried by a short
+``lax.scan``.  Decode updates the (B, H, P, N) state in O(1) per token.
+
+Projections are split per component (z, x, B, C, dt) rather than fused, so
+tensor-parallel sharding maps cleanly: z/x/dt/head dims shard over ``model``;
+the small B/C projections stay replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+
+NEG_INF = -1e30
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    assert cfg.mamba is not None
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    H = mc.num_heads(d)
+    N, G = mc.d_state, 1
+    ks = jax.random.split(key, 8)
+    s = d**-0.5
+    dt = jnp.exp(
+        jax.random.uniform(ks[6], (H,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "wz": (jax.random.normal(ks[0], (d, di), jnp.float32) * s).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, di), jnp.float32) * s).astype(dtype),
+        "wB": (jax.random.normal(ks[2], (d, G * N), jnp.float32) * s).astype(dtype),
+        "wC": (jax.random.normal(ks[3], (d, G * N), jnp.float32) * s).astype(dtype),
+        "wdt": (jax.random.normal(ks[4], (d, H), jnp.float32) * s).astype(dtype),
+        "out": (jax.random.normal(ks[5], (di, d), jnp.float32) * di**-0.5).astype(dtype),
+        "conv_x": (jax.random.normal(ks[7], (mc.d_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv.  x (B,S,C), w (K,C).  ``tail`` (B,K-1,C) is the
+    running state for decode/prefill-continuation; returns (y, new_tail)."""
+
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, k : k + x.shape[1], :] * w[k][None, None, :] for k in range(K))
+    new_tail = xp[:, x.shape[1] :, :]  # last K-1 inputs
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., Q) → (..., Q, Q) lower-triangular segment sums: out[i,j] =
+    sum a[j+1..i] for j<=i, -inf above the diagonal."""
+
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B,S,H,P)
+    dt: jax.Array,  # (B,S,H) post-softplus
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B,S,N)   (single group)
+    Cm: jax.Array,  # (B,S,N)
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,H,P), final state (B,H,P,N))."""
+
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # padded steps have dt=0: decay exp(0)=1 and zero state contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // Q
+
+    xa = (x * dt[..., None]).astype(jnp.float32)  # fold dt into x
+    dA = (dt * A[None, None, :]).astype(jnp.float32)  # (B,S,H)
+
+    # chunked views
+    xc = xa.reshape(B_, nc, Q, H, P)
+    dAc = dA.reshape(B_, nc, Q, H).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    Bc = Bm.reshape(B_, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(dAc, axis=-1)  # (B,H,nc,Q)
+    L = jnp.exp(_segsum(dAc))  # (B,H,nc,Q,Q)
+
+    # 1. intra-chunk output
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bcqs,bhcqs,bcshp->bcqhp", scores, L, xc
+    )
+
+    # 2. per-chunk input → state contribution
+    decay_states = jnp.exp(cum[..., -1:] - cum)  # (B,H,nc,Q)
+    states = jnp.einsum("bcqn,bhcq,bcqhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,H,nc)
+    h_init = (
+        jnp.zeros((B_, H, P, N), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def scan_fn(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_out = h  # state *entering* this chunk
+        h_next = h * dec[..., None, None] + st
+        return h_next, h_out
+
+    states_t = states.transpose(1, 0, 2, 3, 4)  # (nc,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)  # (nc,B,H)
+    h_final, h_enter = jax.lax.scan(scan_fn, h_init, (states_t, decay_t))
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4. state → output within each chunk
+    state_decay = jnp.exp(cum)  # (B,H,nc,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cc, h_enter, state_decay)
+
+    y = (y_diag + y_off).reshape(B_, S_pad, H, P)
+    if pad:
+        y = y[:, :S]
+    return y, h_final
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: dict | None = None,
+) -> Tuple[jax.Array, dict]:
+    """Full-sequence (train/prefill) Mamba2 mixer.  Returns (y, new_state)."""
+
+    assert cfg.mamba is not None
+    mc = cfg.mamba
+    B_, S, d = x.shape
+    H, P, N = mc.num_heads(d), mc.head_dim, mc.d_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"])
+
+    conv_tail = state["conv"] if state is not None else None
+    xin, new_tail = _causal_conv(xin, params["conv_x"], conv_tail)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(B_, S, H, P)
+    h0 = state["ssm"] if state is not None else None
+    y, h = ssd_chunked(xh, dt, A, Bm, Cm, mc.chunk, h0)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, H * P)
+
+    # gated RMS norm (mamba2's pre-out-proj norm)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"]
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out"])
+    return out, {"ssm": h, "conv": new_tail}
+
+
+def mamba_decode_step(
+    params: dict, x: jax.Array, cfg: ModelConfig, state: dict
+) -> Tuple[jax.Array, dict]:
+    """One-token step.  x (B,1,d); state {'ssm': (B,H,P,N), 'conv': (B,K-1,di)}."""
+
+    assert cfg.mamba is not None
+    mc = cfg.mamba
+    B_, _, d = x.shape
+    H, P, N = mc.num_heads(d), mc.head_dim, mc.d_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"])
+
+    xin, new_tail = _causal_conv(xin, params["conv_x"], state["conv"])
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    xh = xin.reshape(B_, H, P).astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)  # (B,N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+
+    h = state["ssm"].astype(jnp.float32)
+    h = h * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bf
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) + xh * params["D"][None, :, None]
+    y = y.reshape(B_, 1, H * P)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"]
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out"])
+    return out, {"ssm": h, "conv": new_tail}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> dict:
+    assert cfg.mamba is not None
+    mc = cfg.mamba
+    d = cfg.d_model
+    H, P, N = mc.num_heads(d), mc.head_dim, mc.d_state
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, mc.d_inner(d)), jnp.dtype(cfg.dtype)),
+    }
+
+
+def ssd_reference(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-recurrence oracle for the chunked SSD (tests)."""
+
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (
+        jnp.zeros((B_, H, P, N), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])  # (B,H)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn",
+            dt[:, t],
+            x[:, t].astype(jnp.float32),
+            Bm[:, t].astype(jnp.float32),
+        )
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, Cm[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1), h

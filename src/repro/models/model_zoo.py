@@ -1,0 +1,152 @@
+"""Unified model API over decoder / encoder-decoder families.
+
+``batch`` dict contract (all modes):
+  tokens (B,S) int32            — text tokens (decoder input for encdec)
+  labels (B,S) int32            — next-token targets (train)
+  frame_embeds (B,F,d)          — audio frontend stub (whisper)
+  patch_embeds (B,P,d)          — vision frontend stub (llava)
+
+``loss_fn`` is the training objective (mean NLL + MoE aux), ``prefill`` /
+``decode_step`` the serving path.  All functions are functional and jit/pjit
+friendly; sharding is attached at the launch layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLP_MOE, ModelConfig
+from repro.models import encdec, transformer
+from repro.models.layers import softmax_cross_entropy
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------- #
+# init / forward / loss
+# ---------------------------------------------------------------------- #
+
+def init(key: jax.Array, cfg: ModelConfig) -> dict:
+    if cfg.family == "encdec":
+        return encdec.init_encdec(key, cfg)
+    return transformer.init_decoder(key, cfg)
+
+
+def forward_logits(
+    params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+    act_constrain=None,
+) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "encdec":
+        return encdec.forward(params, batch["frame_embeds"], batch["tokens"], cfg)
+    return transformer.forward(
+        params, batch["tokens"], cfg, prefix_embeds=batch.get("patch_embeds"),
+        act_constrain=act_constrain,
+    )
+
+
+def loss_fn(
+    params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+    act_constrain=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_logits(params, batch, cfg, act_constrain)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and cfg.num_patches:
+        # loss over text positions only (patch prefix produces no targets)
+        logits = logits[:, cfg.num_patches :, :]
+    nll = softmax_cross_entropy(logits, labels, batch.get("loss_mask"))
+    loss = nll + AUX_LOSS_WEIGHT * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------- #
+# serving
+# ---------------------------------------------------------------------- #
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def prefill(
+    params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig, cache: dict
+) -> Tuple[jax.Array, dict]:
+    if cfg.family == "encdec":
+        return encdec.prefill(
+            params, batch["frame_embeds"], batch["tokens"], cfg, cache
+        )
+    return transformer.prefill(
+        params, batch["tokens"], cfg, cache,
+        prefix_embeds=batch.get("patch_embeds"),
+    )
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    cache_len: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, tokens, cfg, cache, cache_len)
+    return transformer.decode_step(params, tokens, cfg, cache, cache_len)
+
+
+# ---------------------------------------------------------------------- #
+# accounting (roofline's MODEL_FLOPS)
+# ---------------------------------------------------------------------- #
+
+def param_count(params: dict) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params: dict, cfg: ModelConfig) -> int:
+    """Parameters touched per token: routed experts scaled by top_k/E."""
+
+    if not cfg.has_moe:
+        return param_count(params)
+    assert cfg.moe is not None
+    total = 0
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+
+    def walk(tree: Any, inside_moe: bool) -> int:
+        n = 0
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k == "moe":
+                    # routed expert weights scale by top_k/E; router+shared full
+                    for kk, vv in v.items():
+                        leaves = jax.tree.leaves(vv)
+                        size = sum(x.size for x in leaves)
+                        if kk in ("w_gate", "w_up", "w_down"):
+                            n += int(size * frac)
+                        else:
+                            n += size
+                else:
+                    n += walk(v, inside_moe)
+        else:
+            n += sum(x.size for x in jax.tree.leaves(tree))
+        return n
+
+    return walk(params, False)
+
+
+def model_flops_per_token(params: dict, cfg: ModelConfig) -> float:
+    """6·N(active)·1 per token (the §Roofline MODEL_FLOPS convention)."""
+
+    return 6.0 * active_param_count(params, cfg)
+
+
+def abstract_params(cfg: ModelConfig, key: Optional[jax.Array] = None):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init(k, cfg), key)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts MLP: top-k router + GShard-style grouped dispatch.
+
+Dispatch is capacity-based within token groups of ``group_size`` so the
+one-hot dispatch/combine einsums cost O(tokens · group · d) instead of
+O(tokens · seq · d) — the standard TPU formulation (einsums lower to MXU
+matmuls; no dynamic shapes, SPMD-friendly).  Supports deepseek-style shared
+experts (always-on dense experts added to the routed output).
+
+Expert parallelism: the expert-stacked weights carry an ``experts`` logical
+axis that the sharding rules map onto the ``model`` mesh axis when the
+expert count divides it (deepseek 64, jamba 16); otherwise tensor-parallel
+sharding of ``d_ff_expert`` applies (mixtral 8 experts on a 16-way axis).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import mlp, mlp_init
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    mc = cfg.moe
+    d, ff, E = cfg.d_model, mc.d_ff_expert, mc.num_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d**-0.5, ff**-0.5
+    params = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * s_in).astype(
+            jnp.float32
+        ),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * s_in).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) * s_in).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d), jnp.float32) * s_out).astype(cfg.dtype),
+    }
+    if mc.num_shared:
+        params["shared"] = mlp_init(ks[4], d, ff * mc.num_shared, jnp.dtype(cfg.dtype))
+    return params
+
+
+def _capacity(mc: MoEConfig, group: int) -> int:
+    cap = int(group * mc.top_k * mc.capacity_factor / mc.num_experts)
+    return max(cap, mc.top_k)
+
+
+def moe_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) → (y (B,S,d), aux_loss scalar).
+
+    Returns the load-balancing auxiliary loss (Shazeer-style: mean fraction
+    of tokens per expert × mean router prob per expert × E²·coef)."""
+
+    assert cfg.moe is not None
+    mc = cfg.moe
+    B, S, d = x.shape
+    E, K = mc.num_experts, mc.top_k
+    tokens = B * S
+    G = min(mc.group_size, tokens)
+    n_groups = tokens // G
+    assert n_groups * G == tokens, (tokens, G)
+    C = _capacity(mc, G)
+
+    xg = x.reshape(n_groups, G, d)
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (n,G,E)
+
+    # top-k selection per token
+    top_p, top_e = jax.lax.top_k(probs, K)  # (n,G,K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's capacity, by token order
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # (n,G,K,E)
+    flat = onehot.reshape(n_groups, G * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (n,G*K,E) slots before this one
+    pos = jnp.einsum("nse,nse->ns", pos, flat).reshape(n_groups, G, K)
+    keep = pos < C
+    top_p = top_p * keep
+
+    # dispatch (n,G,E,C) / combine weights
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # (n,G,K,C)
+    dispatch = jnp.einsum("ngke,ngkc->ngec", onehot, pos_oh * keep[..., None])
+    combine = jnp.einsum("ngke,ngkc,ngk->ngec", onehot, pos_oh, top_p)
+
+    expert_in = jnp.einsum(
+        "ngec,ngd->negcd".replace("negcd", "encd"),
+        dispatch.astype(x.dtype),
+        xg,
+    )  # (E,n,C,d)
+    gate = jnp.einsum("encd,edf->encf", expert_in, params["w_gate"])
+    up = jnp.einsum("encd,edf->encf", expert_in, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    expert_out = jnp.einsum("encf,efd->encd", act, params["w_down"])
+    yg = jnp.einsum("ngec,encd->ngd", combine.astype(x.dtype), expert_out)
+
+    y = yg.reshape(B, S, d)
+    if mc.num_shared:
+        y = y + mlp(params["shared"], x)
+
+    # aux load-balancing loss
+    density = jnp.mean(onehot.sum(axis=2), axis=1)         # (n,E) token frac
+    router_prob = jnp.mean(probs, axis=1)                  # (n,E)
+    aux = jnp.mean(jnp.sum(density * router_prob, axis=-1)) * E
+    return y, aux.astype(jnp.float32)
+
+
+def moe_reference(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Dense oracle: every token through its top-k experts exactly (no
+    capacity drops).  Used by tests on small configs."""
+
+    assert cfg.moe is not None
+    mc = cfg.moe
+    B, S, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, mc.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    def per_expert(e):
+        w = {k: params[k][e] for k in ("w_gate", "w_up", "w_down")}
+        gate = jnp.einsum("bsd,df->bsf", x, w["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, w["w_up"])
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        return jnp.einsum("bsf,fd->bsd", act, w["w_down"])
+
+    all_out = jnp.stack([per_expert(e) for e in range(mc.num_experts)])  # (E,B,S,d)
+    sel = jnp.take_along_axis(
+        all_out.transpose(1, 2, 0, 3),  # (B,S,E,d)
+        top_e[..., None].astype(jnp.int32),
+        axis=2,
+    )  # (B,S,K,d)
+    y = jnp.sum(sel * top_p[..., None].astype(x.dtype), axis=2)
+    if mc.num_shared:
+        y = y + mlp(params["shared"], x)
+    return y

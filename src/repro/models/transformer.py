@@ -1,0 +1,369 @@
+"""Decoder LM over repeating layer blocks, with scan-over-blocks.
+
+Supports every assigned decoder-family architecture through the block
+pattern in :class:`repro.configs.base.ModelConfig`:
+
+  * dense GQA (yi, granite, internlm2) — block = [attn+dense]
+  * 5:1 local:global (gemma3) — block = [local×5, global], remainder layers
+  * MoE (deepseek: 64e top-6 + 2 shared; mixtral: 8e top-2 + SWA)
+  * hybrid (jamba: mamba×7 : attn×1, MoE every other layer)
+  * pure SSM (mamba2) — attention-free
+  * VLM (llava) — patch-embedding prefix from the stubbed vision frontend
+
+Three entry modes share the layer code: ``train`` (full seq, no cache),
+``prefill`` (full seq, builds cache), ``decode`` (one token against cache).
+Parameters for the ``num_blocks`` repeats are stacked on a leading axis and
+consumed by ``lax.scan`` so HLO size is depth-independent; remainder layers
+(depth % block) are unrolled at the end.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    MAMBA,
+    MLP_DENSE,
+    MLP_MOE,
+    MLP_NONE,
+    LayerPos,
+    ModelConfig,
+)
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+
+# ---------------------------------------------------------------------- #
+# init
+# ---------------------------------------------------------------------- #
+
+def _layer_init(key: jax.Array, pos: LayerPos, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model)}
+    if pos.mixer in (ATTN, ATTN_LOCAL):
+        p["attn"] = attn_lib.attn_init(k1, cfg)
+    elif pos.mixer == MAMBA:
+        p["mamba"] = mamba_lib.mamba_init(k1, cfg)
+    else:
+        raise ValueError(pos.mixer)
+    if pos.mlp == MLP_DENSE and cfg.d_ff > 0:
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+    elif pos.mlp == MLP_MOE:
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["moe"] = moe_lib.moe_init(k2, cfg)
+    return p
+
+
+def _block_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.block))
+    return {
+        f"pos{i}": _layer_init(keys[i], pos, cfg)
+        for i, pos in enumerate(cfg.block)
+    }
+
+
+def init_decoder(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_embed, k_blocks, k_rem = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"embed": embed_init(k_embed, cfg)}
+    if cfg.num_blocks:
+        block_keys = jax.random.split(k_blocks, cfg.num_blocks)
+        params["blocks"] = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    rem_keys = jax.random.split(k_rem, max(cfg.remainder_layers, 1))
+    params["rem"] = {
+        f"layer{i}": _layer_init(rem_keys[i], cfg.block[i], cfg)
+        for i in range(cfg.remainder_layers)
+    }
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------- #
+# caches
+# ---------------------------------------------------------------------- #
+
+def _layer_cache(pos: LayerPos, cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if pos.mixer in (ATTN, ATTN_LOCAL):
+        shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.kv_quant:
+            sshape = shape[:-1] + (1,)
+            return {
+                "k_q": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.float32),
+                "v_q": jnp.zeros(shape, jnp.int8),
+                "v_s": jnp.zeros(sshape, jnp.float32),
+            }
+        return {
+            "k": jnp.zeros(shape, jnp.dtype(cfg.dtype)),
+            "v": jnp.zeros(shape, jnp.dtype(cfg.dtype)),
+        }
+    return mamba_lib.mamba_init_state(cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    cache: Dict[str, Any] = {}
+    if cfg.num_blocks:
+        per_block = {
+            f"pos{i}": _layer_cache(pos, cfg, batch, max_len)
+            for i, pos in enumerate(cfg.block)
+        }
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.num_blocks,) + x.shape
+            ).copy(),
+            per_block,
+        )
+    cache["rem"] = {
+        f"layer{i}": _layer_cache(cfg.block[i], cfg, batch, max_len)
+        for i in range(cfg.remainder_layers)
+    }
+    return cache
+
+
+# ---------------------------------------------------------------------- #
+# layer application (shared by all modes)
+# ---------------------------------------------------------------------- #
+
+def _apply_layer(
+    p: dict,
+    x: jax.Array,
+    pos: LayerPos,
+    cfg: ModelConfig,
+    mode: str,
+    cache: Optional[dict],
+    cache_len: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window if pos.mixer == ATTN_LOCAL else None
+
+    def pin(t: jax.Array) -> jax.Array:
+        # Pin the residual stream to bf16 at layer boundaries: without this
+        # the SPMD partitioner sinks the downstream rmsnorm's f32 convert
+        # underneath the tensor-parallel all-reduce and reduces in f32 —
+        # doubling the dominant collective traffic (measured: gemma3 train
+        # 197 GB/chip → 99 GB/chip; EXPERIMENTS.md §Perf iteration 1).
+        return jax.lax.optimization_barrier(t) if cfg.pin_collective_dtype else t
+
+    # --- mixer ---
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if pos.mixer in (ATTN, ATTN_LOCAL):
+        q, k, v = attn_lib.qkv_project(p["attn"], h)
+        if mode == "decode":
+            positions = cache_len.reshape(1)
+        else:
+            positions = jnp.arange(x.shape[1])
+        q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+        new_cache = cache
+        if mode == "train":
+            o = attn_lib.chunked_attention(
+                q, k, v, causal=True, window=window, chunk=cfg.attn_chunk
+            )
+        elif mode == "prefill":
+            if cfg.kv_quant:
+                new_cache = attn_lib.update_kv_cache_q(cache, k, v, 0)
+            else:
+                kc, vc = attn_lib.update_kv_cache(
+                    cache["k"], cache["v"], k, v, 0
+                )
+                new_cache = {"k": kc, "v": vc}
+            o = attn_lib.chunked_attention(
+                q, k, v, causal=True, window=window, chunk=cfg.attn_chunk
+            )
+        else:  # decode
+            if cfg.kv_quant:
+                new_cache = attn_lib.update_kv_cache_q(cache, k, v, cache_len)
+                o = attn_lib.decode_attention_q(
+                    q, new_cache, cache_len + 1, window=window
+                )
+            else:
+                kc, vc = attn_lib.update_kv_cache(
+                    cache["k"], cache["v"], k, v, cache_len
+                )
+                new_cache = {"k": kc, "v": vc}
+                o = attn_lib.decode_attention(
+                    q, kc, vc, cache_len + 1, window=window
+                )
+        x = pin(x + attn_lib.out_project(p["attn"], o))
+    else:  # mamba
+        if mode == "train":
+            o, _ = mamba_lib.mamba_apply(p["mamba"], h, cfg, None)
+            new_cache = cache
+        elif mode == "prefill":
+            o, new_cache = mamba_lib.mamba_apply(p["mamba"], h, cfg, cache)
+        else:
+            o, new_cache = mamba_lib.mamba_decode_step(p["mamba"], h, cfg, cache)
+        x = pin(x + o)
+
+    # --- mlp ---
+    if pos.mlp == MLP_DENSE and "mlp" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = pin(x + mlp(p["mlp"], h))
+    elif pos.mlp == MLP_MOE:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = moe_lib.moe_apply(p["moe"], h, cfg)
+        x = pin(x + y)
+    return x, new_cache, aux
+
+
+def _apply_block(
+    bp: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    bc: Optional[dict],
+    cache_len: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    new_bc: Dict[str, Any] = {}
+    for i, pos in enumerate(cfg.block):
+        pc = bc[f"pos{i}"] if bc is not None else None
+        x, npc, aux = _apply_layer(
+            bp[f"pos{i}"], x, pos, cfg, mode, pc, cache_len
+        )
+        new_bc[f"pos{i}"] = npc
+        aux_total = aux_total + aux
+    return x, (new_bc if bc is not None else None), aux_total
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+
+
+def _run_stack(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    cache: Optional[dict],
+    cache_len: Optional[jax.Array],
+    act_constrain=None,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Scan the stacked blocks, then unroll remainder layers.
+
+    ``act_constrain`` (optional, launch-layer injected): sharding constraint
+    applied to the residual-stream carry at block boundaries — with a
+    sequence-parallel spec this shrinks the saved per-block carries (the
+    dominant training-memory term) by the model-axis degree, at the cost of
+    per-block gather traffic (Megatron-SP trade; see EXPERIMENTS.md §Perf).
+    """
+
+    aux0 = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {"rem": {}}
+    if act_constrain is not None:
+        x = act_constrain(x)
+
+    if cfg.num_blocks:
+        def body(carry, inputs):
+            xc, aux = carry
+            if cache is not None:
+                bp, bc = inputs
+            else:
+                bp, bc = inputs, None
+            xc, nbc, a = _apply_block(bp, xc, cfg, mode, bc, cache_len)
+            if act_constrain is not None:
+                xc = act_constrain(xc)
+            return (xc, aux + a), nbc
+
+        if mode == "train" and cfg.remat != "none":
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+
+        xs = (
+            (params["blocks"], cache["blocks"])
+            if cache is not None
+            else params["blocks"]
+        )
+        (x, aux0), scanned_cache = jax.lax.scan(body, (x, aux0), xs)
+        if cache is not None:
+            new_cache["blocks"] = scanned_cache
+
+    for i in range(cfg.remainder_layers):
+        pc = cache["rem"][f"layer{i}"] if cache is not None else None
+        x, npc, a = _apply_layer(
+            params["rem"][f"layer{i}"], x, cfg.block[i], cfg, mode, pc, cache_len
+        )
+        if cache is not None:
+            new_cache["rem"][f"layer{i}"] = npc
+        aux0 = aux0 + a
+
+    return x, (new_cache if cache is not None else None), aux0
+
+
+# ---------------------------------------------------------------------- #
+# public entry points
+# ---------------------------------------------------------------------- #
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    act_constrain=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Train-mode forward.  Returns (logits (B,S,V), aux_loss).
+
+    ``prefix_embeds`` (B,P,d) are prepended (VLM patch embeddings)."""
+
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, _, aux = _run_stack(
+        params, x, cfg, "train", None, None, act_constrain=act_constrain
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), aux
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Fill the cache from a full prompt.  Returns (last-position logits, cache)."""
+
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, new_cache, _ = _run_stack(params, x, cfg, "prefill", cache, None)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), new_cache
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    cache_len: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """One decode step.  tokens (B,1); cache_len = tokens already cached."""
+
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x, new_cache, _ = _run_stack(params, x, cfg, "decode", cache, cache_len)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), new_cache

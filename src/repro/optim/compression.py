@@ -1,0 +1,107 @@
+"""Error-feedback gradient compression for the DP all-reduce.
+
+Two compressors, both with error feedback (the residual between the true
+and compressed gradient is carried into the next step, preserving
+convergence — Karimireddy et al. style):
+
+  * :class:`Int8Compressor` — per-tensor symmetric int8 quantization:
+    4× fewer all-reduce bytes (f32→int8) at ~1/255 relative rounding,
+    absorbed by the EF residual.
+  * :class:`TopKCompressor` — magnitude top-k sparsification (k as a
+    fraction): for k=1% the all-reduce payload drops ~50×(index+value).
+
+``compressed_bytes`` reports the wire size so the roofline's collective
+term can be re-derived under compression (used in §Perf of EXPERIMENTS.md).
+The compressors are pure pytree→pytree functions with explicit state, so
+they jit cleanly inside the train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _zeros_like_f32(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Symmetric per-tensor int8 with error feedback."""
+
+    def init(self, params: Any) -> Any:
+        return _zeros_like_f32(params)
+
+    def compress(self, grads: Any, residual: Any) -> Tuple[Any, Any, Any]:
+        """→ (quantized int8 tree, scales, new residual)."""
+
+        def one(g, r):
+            g = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+            return q, scale, g - deq
+
+        flat, treedef = jax.tree.flatten(grads)
+        rflat = jax.tree.leaves(residual)
+        qs, scales, res = zip(*(one(g, r) for g, r in zip(flat, rflat)))
+        return (
+            jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, res),
+        )
+
+    def decompress(self, q: Any, scales: Any) -> Any:
+        return jax.tree.map(
+            lambda x, s: x.astype(jnp.float32) * s, q, scales
+        )
+
+    def apply(self, grads: Any, residual: Any) -> Tuple[Any, Any]:
+        """grads → (dequantized grads as sent over the wire, new residual)."""
+
+        q, scales, res = self.compress(grads, residual)
+        return self.decompress(q, scales), res
+
+    @staticmethod
+    def compressed_bytes(grads: Any) -> int:
+        return sum(x.size for x in jax.tree.leaves(grads))  # 1 B/elem
+
+    @staticmethod
+    def raw_bytes(grads: Any) -> int:
+        return sum(x.size * 4 for x in jax.tree.leaves(grads))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Magnitude top-k with error feedback.  k = fraction of entries kept."""
+
+    fraction: float = 0.01
+
+    def init(self, params: Any) -> Any:
+        return _zeros_like_f32(params)
+
+    def apply(self, grads: Any, residual: Any) -> Tuple[Any, Any]:
+        def one(g, r):
+            g = g.astype(jnp.float32) + r
+            flat = g.reshape(-1)
+            k = max(1, int(flat.size * self.fraction))
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            mask = jnp.zeros_like(flat).at[idx].set(1.0)
+            kept = flat * mask
+            return kept.reshape(g.shape), (flat - kept).reshape(g.shape)
+
+        flat, treedef = jax.tree.flatten(grads)
+        rflat = jax.tree.leaves(residual)
+        outs, res = zip(*(one(g, r) for g, r in zip(flat, rflat)))
+        return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, res)
+
+    def compressed_bytes(self, grads: Any) -> int:
+        # value (4B) + index (4B) per kept entry
+        return sum(
+            8 * max(1, int(x.size * self.fraction))
+            for x in jax.tree.leaves(grads)
+        )

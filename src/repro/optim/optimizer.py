@@ -1,0 +1,98 @@
+"""AdamW + schedules, pure-pytree (no optax dependency).
+
+Optimizer state lives in fp32 regardless of param dtype (bf16-safe master
+moments); weight decay is decoupled.  ``scale_by_schedule`` implements
+linear-warmup cosine decay.  State pytrees mirror params, so the parameter
+PartitionSpecs apply verbatim to both moments — no extra sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    # ------------------------------------------------------------------ #
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        frac = jnp.clip(
+            (step - self.warmup_steps)
+            / max(self.total_steps - self.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        decay = self.min_lr_ratio + (1 - self.min_lr_ratio) * cos
+        return self.learning_rate * warm * decay
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any
+    ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu,
+            grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1**t)
+        nu_hat_scale = 1.0 / (1 - b2**t)
+        lr = self.schedule(step)
+
+        def upd(p, m, v):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))

@@ -1,0 +1,138 @@
+import os
+
+if __name__ == "__main__":  # entry-point guard: flags before jax init
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+"""Pipeline-parallel lowering on the production mesh.
+
+Proves the sync-planned pipeline schedule lowers to real collectives: the
+retained events of :func:`repro.core.schedule.plan_pipeline_sync` become
+``jax.lax.ppermute`` hand-offs inside a ``shard_map`` over the mesh's
+``model`` axis (16 stages on the 16×16 pod), and eliminated events become
+payload fields riding the same permute — so the compiled HLO contains
+exactly ONE collective-permute per microbatch step regardless of how many
+skip/fan-out dependences the stage graph has.  ``python -m
+repro.runtime.pp_lowering`` AOT-compiles it on the 512-placeholder-device
+environment and asserts the collective count (also covered by
+tests/test_dryrun_integration.py-style subprocess in tests/test_pp_lowering.py).
+"""
+
+import functools  # noqa: E402
+from typing import Tuple  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core.schedule import StageGraph, plan_pipeline_sync, stage_of  # noqa: E402
+
+
+def build_pipeline_step(
+    mesh,
+    num_microbatches: int,
+    d_model: int,
+    skips: Tuple[Tuple[int, int], ...] = (),
+    axis: str = "model",
+):
+    """A shard_map'd pipeline step: each chip along ``axis`` is one stage.
+
+    Stage s applies its own weight matrix; the residual payload carries both
+    the chain activation AND the skip values the transitive reduction proved
+    can piggyback (a single f32 lane-block per eliminated producer).
+    Returns (step_fn, plan).  step_fn(weights, inputs) -> outputs where
+    weights (S, d, d) is stage-sharded and inputs (M, B, d) are replicated.
+    """
+
+    S = mesh.shape[axis]
+    plan = plan_pipeline_sync(
+        StageGraph(num_stages=S, num_microbatches=num_microbatches, skips=skips)
+    )
+    n_skip = len(skips)
+
+    def stage_step(w, x, skip_vals, stage_idx):
+        """One stage's compute: consume chain input + its skip inputs."""
+        extra = jnp.zeros_like(x)
+        for j, (src, dst) in enumerate(skips):
+            extra = extra + jnp.where(stage_idx == dst, skip_vals[j], 0.0)
+        y = jnp.tanh((x + extra) @ w)
+        new_skips = []
+        for j, (src, dst) in enumerate(skips):
+            new_skips.append(jnp.where(stage_idx == src, y, skip_vals[j]))
+        return y, jnp.stack(new_skips) if new_skips else skip_vals
+
+    def pipelined(w_local, xs):
+        # w_local: (1, d, d) this stage's weights; xs: (M, B, d) replicated
+        stage_idx = jax.lax.axis_index(axis)
+        M = xs.shape[0]
+        B, d = xs.shape[1], xs.shape[2]
+        w = w_local[0]
+
+        def body(carry, m):
+            x_in, skip_in, out_acc = carry
+            # stage 0 injects microbatch m; others consume the permuted input
+            x = jnp.where(stage_idx == 0, xs[m], x_in)
+            y, skip_out = stage_step(w, x, skip_in, stage_idx)
+            # ONE ppermute moves the chain value AND the piggybacked skips —
+            # the eliminated dependences cost no extra collective
+            payload = jnp.concatenate([y[None], skip_out], axis=0)
+            moved = jax.lax.ppermute(
+                payload,
+                axis,
+                [(i, (i + 1) % S) for i in range(S)],
+            )
+            x_next, skip_next = moved[0], moved[1:]
+            # the last stage's outputs accumulate (shifted schedule: output
+            # for microbatch m emerges after S steps; toy schedule runs the
+            # fill phase only, enough for the collective-count proof)
+            out_acc = out_acc.at[m].set(jnp.where(stage_idx == S - 1, y, 0.0))
+            return (x_next, skip_next, out_acc), None
+
+        x0 = jnp.zeros((B, d), xs.dtype)
+        s0 = jnp.zeros((max(n_skip, 1), B, d), xs.dtype)
+        o0 = jnp.zeros((M, B, d), xs.dtype)
+        (x_fin, _, outs), _ = jax.lax.scan(
+            body, (x0, s0[:n_skip] if n_skip else s0[:0], o0), jnp.arange(M)
+        )
+        return outs
+
+    step = jax.shard_map(
+        pipelined,
+        mesh=mesh,
+        in_specs=(P(axis, None, None), P(None, None, None)),
+        out_specs=P(None, None, None),
+        check_vma=False,
+    )
+    return step, plan
+
+
+def main() -> None:
+    from repro.launch.hlo_analysis import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    S = mesh.shape["model"]
+    skips = tuple((0, d) for d in range(2, 8))  # 6 fan-out edges
+    M, B, d = 4, 8, 128
+    step, plan = build_pipeline_step(mesh, M, d, skips)
+    w = jax.ShapeDtypeStruct((S, d, d), jnp.float32)
+    xs = jax.ShapeDtypeStruct((M, B, d), jnp.float32)
+    with mesh:
+        compiled = jax.jit(step).lower(w, xs).compile()
+    coll = parse_collectives(compiled.as_text())
+    print("sync plan:", plan.summary())
+    print("collective counts:", coll.counts)
+    n_cp = coll.counts.get("collective-permute", 0)
+    naive = (S - 1) + len(skips)
+    print(
+        f"collective-permutes in HLO: {n_cp} per microbatch step "
+        f"(naive one-per-dependence schedule: {naive})"
+    )
+    assert n_cp <= 2, "piggybacked schedule must lower to O(1) permutes/step"
+    print("pp lowering: OK")
+
+
+if __name__ == "__main__":
+    main()

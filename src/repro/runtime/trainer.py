@@ -1,0 +1,149 @@
+"""Supervised training loop: checkpoint/restart, failure recovery, straggler
+accounting, deterministic data resume — the control plane a real fleet runs.
+
+The loop is deliberately separable from jit'd math: ``train_loop`` drives
+(data iterator → train_step → checkpoint → failure handling) and recovers
+from :class:`WorkerFailure` by re-planning the mesh (elastic shrink),
+restoring the newest snapshot and replaying the data stream from its saved
+state.  On this container the mesh is 1 CPU device and failures are
+injected; the recovery logic (restore + exact data replay + step continuity)
+is what the integration tests pin down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager, Snapshot
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataIterator, DataState
+from repro.launch.steps import make_train_step
+from repro.models import model_zoo as zoo
+from repro.optim.optimizer import AdamW
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerDetector,
+    WorkerFailure,
+    plan_elastic_mesh,
+)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_step: int
+    losses: List[float]
+    restarts: int
+    straggler_reports: List[List[str]]
+    state: dict
+
+
+def train_loop(
+    cfg: ModelConfig,
+    data_cfg: DataConfig,
+    *,
+    total_steps: int,
+    ckpt: Optional[CheckpointManager] = None,
+    ckpt_every: int = 10,
+    opt: Optional[AdamW] = None,
+    microbatches: int = 1,
+    seed: int = 0,
+    failure_injector: Optional[Callable[[int], None]] = None,
+    grad_compressor=None,
+) -> TrainResult:
+    """Run (or resume) training for ``total_steps`` optimizer steps."""
+
+    opt = opt or AdamW(warmup_steps=10, total_steps=total_steps)
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, opt, microbatches=microbatches, grad_compressor=grad_compressor
+        )
+    )
+
+    # ---- restore or init ------------------------------------------------ #
+    params = zoo.init(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+    start_step = 0
+    data_state = DataState(seed=data_cfg.seed, step=0)
+    if ckpt is not None:
+        snap = ckpt.restore(target={"params": params, "opt": opt_state})
+        if snap is not None:
+            params = jax.tree.map(jnp.asarray, snap.tree["params"])
+            opt_state = jax.tree.map(jnp.asarray, snap.tree["opt"])
+            start_step = snap.step
+            data_state = snap.data_state or data_state
+
+    it = DataIterator(data_cfg, cfg, state=data_state)
+    monitor = HeartbeatMonitor([f"w{i}" for i in range(data_cfg.num_hosts)])
+    stragglers = StragglerDetector()
+    losses: List[float] = []
+    reports: List[List[str]] = []
+    restarts = 0
+
+    step = start_step
+    while step < total_steps:
+        try:
+            if failure_injector is not None:
+                failure_injector(step)
+            t0 = time.monotonic()
+            batch = next(it)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            dt = time.monotonic() - t0
+            for w in monitor.alive():
+                monitor.heartbeat(w)
+                stragglers.record(w, dt)
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if stragglers.stragglers():
+                reports.append(stragglers.stragglers())
+            if ckpt is not None and step % ckpt_every == 0:
+                ckpt.save(
+                    Snapshot(
+                        step=step,
+                        tree={
+                            "params": jax.tree.map(lambda x: x, params),
+                            "opt": opt_state,
+                        },
+                        data_state=it.peek_state(),
+                    )
+                )
+        except WorkerFailure as f:
+            # ---- elastic recovery ---------------------------------------- #
+            restarts += 1
+            monitor.mark_failed(f.worker)
+            healthy = len(monitor.alive())
+            plan = plan_elastic_mesh(
+                healthy * 256 // max(data_cfg.num_hosts, 1) or 256,
+                global_batch=data_cfg.global_batch,
+            )
+            del plan  # on real hardware: rebuild mesh + device_put reshard
+            if ckpt is None:
+                raise
+            ckpt.wait()
+            snap = ckpt.restore(target={"params": params, "opt": opt_state})
+            if snap is None:
+                # no checkpoint yet: restart from scratch
+                params = zoo.init(jax.random.PRNGKey(seed), cfg)
+                opt_state = opt.init(params)
+                step = 0
+                it = DataIterator(data_cfg, cfg)
+            else:
+                params = jax.tree.map(jnp.asarray, snap.tree["params"])
+                opt_state = jax.tree.map(jnp.asarray, snap.tree["opt"])
+                step = snap.step
+                it = DataIterator(data_cfg, cfg, state=snap.data_state)
+
+    if ckpt is not None:
+        ckpt.wait()
+    return TrainResult(
+        final_step=step,
+        losses=losses,
+        restarts=restarts,
+        straggler_reports=reports,
+        state={"params": params, "opt": opt_state},
+    )

@@ -1,0 +1,249 @@
+"""Dependence analysis — validated against the paper's Fig. 3a / Alg. 4 / Alg. 6."""
+
+import pytest
+
+from repro.core import (
+    ANTI,
+    FLOW,
+    OUTPUT,
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    analyze,
+    loop_carried,
+    paper_alg1,
+    paper_alg4,
+    paper_alg6,
+)
+
+
+def dep_set(deps):
+    return {(d.kind, d.source, d.sink, d.array, d.distance) for d in deps}
+
+
+class TestPaperAlg1:
+    """Fig. 3(a): the acyclic example."""
+
+    def test_exact_dependence_set(self):
+        deps = analyze(paper_alg1())
+        assert dep_set(deps) == {
+            (FLOW, "S2", "S1", "b", (1,)),   # S1 reads b[i-1]
+            (FLOW, "S2", "S3", "b", (0,)),   # S3 reads b[i] (loop-independent)
+            (FLOW, "S1", "S3", "a", (1,)),   # S3 reads a[i-1]
+            (FLOW, "S4", "S3", "d", (2,)),   # S3 reads d[i-2]
+            (FLOW, "S2", "S4", "b", (2,)),   # S4 reads b[i-2]
+        }
+
+    def test_loop_carried_subset(self):
+        deps = analyze(paper_alg1())
+        carried = loop_carried(deps)
+        assert all(d.loop_carried for d in carried)
+        assert len(carried) == 4  # the Δ=0 S2→S3 dep is loop-independent
+
+
+class TestPaperAlg4:
+    """Fig. 5: the cyclic example."""
+
+    def test_contains_papers_three_dependences(self):
+        deps = dep_set(analyze(paper_alg4()))
+        # the paper's stated graph: δf Δa=1, δf Δb=2, δf Δc=1
+        assert (FLOW, "S1", "S3", "a", (1,)) in deps
+        assert (FLOW, "S2", "S3", "b", (2,)) in deps
+        assert (FLOW, "S3", "S2", "c", (1,)) in deps
+
+    def test_analyzer_finds_the_dependence_the_paper_missed(self):
+        """S1 reads b[i-1] which S2 writes — a real flow dependence with
+        Δ=1 that Alg. 5 in the paper does not synchronize (see
+        test_executor.py for the resulting race)."""
+
+        deps = dep_set(analyze(paper_alg4()))
+        assert (FLOW, "S2", "S1", "b", (1,)) in deps
+        assert len(deps) == 4
+
+
+class TestPaperAlg6:
+    def test_exact_dependence_set(self):
+        deps = analyze(paper_alg6())
+        assert dep_set(deps) == {
+            (FLOW, "S1", "S3", "a", (2,)),
+            (FLOW, "S3", "S2", "c", (1,)),
+        }
+
+
+class TestOrientation:
+    """The classical definitions: a raw negative distance flips the pair."""
+
+    def test_anti_dependence(self):
+        # S1 reads x[i+1]; S2 writes x[i]: read happens (i) before write (i+1)
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("y", 0), (ArrayRef("x", 1),)),
+                Statement("S2", ArrayRef("x", 0), ()),
+            ),
+            bounds=((0, 4),),
+        )
+        deps = dep_set(analyze(prog))
+        assert (ANTI, "S1", "S2", "x", (1,)) in deps
+
+    def test_loop_independent_anti(self):
+        # S1 reads x[i]; S2 (later) writes x[i]
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("y", 0), (ArrayRef("x", 0),)),
+                Statement("S2", ArrayRef("x", 0), ()),
+            ),
+            bounds=((0, 4),),
+        )
+        deps = dep_set(analyze(prog))
+        assert (ANTI, "S1", "S2", "x", (0,)) in deps
+
+    def test_output_dependence(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("x", 0), ()),
+                Statement("S2", ArrayRef("x", -1), ()),
+            ),
+            bounds=((1, 5),),
+        )
+        deps = dep_set(analyze(prog))
+        # S1 writes x[i]; S2 writes x[j-1]: same cell when j = i+1 → S1 first
+        assert (OUTPUT, "S1", "S2", "x", (1,)) in deps
+
+    def test_self_flow_dependence(self):
+        # recurrence a[i] = a[i-1]
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("a", -1),)),
+            ),
+            bounds=((1, 5),),
+        )
+        deps = dep_set(analyze(prog))
+        assert (FLOW, "S1", "S1", "a", (1,)) in deps
+
+    def test_flipped_flow_becomes_anti_with_positive_distance(self):
+        # S2 writes b[i]; S1 (earlier lexically) reads b[i+2]: the read at
+        # iteration i touches b[i+2], written at iteration i+2 → anti, Δ=2
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("y", 0), (ArrayRef("b", 2),)),
+                Statement("S2", ArrayRef("b", 0), ()),
+            ),
+            bounds=((0, 6),),
+        )
+        deps = analyze(prog)
+        for d in deps:
+            assert all(x >= 0 for x in d.distance) or d.distance == (0,)
+        assert (ANTI, "S1", "S2", "b", (2,)) in dep_set(deps)
+
+
+class TestMultiDim:
+    def test_2d_distances(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 0)),)),
+                Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -2)),)),
+            ),
+            bounds=((0, 4), (0, 4)),
+        )
+        deps = dep_set(analyze(prog))
+        assert (FLOW, "S1", "S1", "a", (1, 0)) in deps
+        assert (FLOW, "S1", "S2", "a", (0, 2)) in deps
+
+
+class TestControlDependence:
+    """Paper §2.1: S_b is control dependent on S_a when whether S_b executes
+    depends on S_a's outcome — modeled via guarded statements."""
+
+    def _guarded(self, n=7):
+        return LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("p", 0), (ArrayRef("a", -1),)),
+                Statement(
+                    "S2",
+                    ArrayRef("a", 0),
+                    (ArrayRef("b", -1),),
+                    guard=ArrayRef("p", -1),
+                ),
+                Statement("S3", ArrayRef("b", 0), (ArrayRef("a", 0),)),
+            ),
+            bounds=((1, n),),
+        )
+
+    def test_control_dep_found(self):
+        from repro.core import CONTROL
+
+        deps = analyze(self._guarded())
+        assert (CONTROL, "S1", "S2", "p", (1,)) in dep_set(deps)
+
+    def test_guard_before_write_is_anti(self):
+        # S1 reads p[i+1] as guard, S2 writes p[i] → anti S1→S2 Δ1
+        prog = LoopProgram(
+            statements=(
+                Statement(
+                    "S1", ArrayRef("y", 0), (), guard=ArrayRef("p", 1)
+                ),
+                Statement("S2", ArrayRef("p", 0), ()),
+            ),
+            bounds=((0, 5),),
+        )
+        assert (ANTI, "S1", "S2", "p", (1,)) in dep_set(analyze(prog))
+
+    def test_guarded_execution_matches_sequential(self):
+        from repro.core import insert_synchronization, run_threaded
+
+        prog = self._guarded()
+        sync = insert_synchronization(prog, analyze(prog))
+        rep = run_threaded(sync, stalls={("S1", (2,)): 0.1})
+        assert rep.matches_sequential
+
+    def test_guarded_optimized_sync_matches(self):
+        from repro.core import parallelize, run_threaded
+
+        rep = parallelize(self._guarded(), method="both")
+        assert len(rep.elimination.eliminated) >= 1
+        run = run_threaded(rep.optimized_sync, stalls={("S2", (1,)): 0.1})
+        assert run.matches_sequential
+
+    def test_missing_control_sync_races(self):
+        """When δc is the ONLY dependence into the guarded statement,
+        dropping its sync lets the guard be read stale — wrong results under
+        an adversarial stall on the guard producer.  (In ``_guarded`` above
+        the δc is transitively covered by the flow-sync chain — which the
+        optimizer correctly detects and eliminates.)"""
+
+        from repro.core import CONTROL, insert_synchronization, run_threaded
+
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("p", 0), (), compute=lambda: 1.0),
+                Statement(
+                    "S2", ArrayRef("a", 0), (), guard=ArrayRef("p", -1)
+                ),
+            ),
+            bounds=((1, 6),),
+        )
+        deps = analyze(prog)
+        assert any(d.kind == CONTROL for d in deps)
+        # stale guards must read negative so skipped≠executed is observable
+        store = prog.initial_store()
+        store["p"] = {k: -1.0 for k in store["p"]}
+
+        synced = insert_synchronization(prog, deps)
+        ok = run_threaded(synced, stalls={("S1", (1,)): 0.3}, store=store)
+        assert ok.matches_sequential
+
+        broken = insert_synchronization(
+            prog, [d for d in deps if d.kind != CONTROL]
+        )
+        # the race needs the iteration-2 thread to win the guard read; under
+        # CPU load the adversarial window can be missed — retry with longer
+        # stalls until the mis-ordering manifests
+        raced = False
+        for stall in (0.3, 0.8, 1.5):
+            rep = run_threaded(
+                broken, stalls={("S1", (1,)): stall}, store=store
+            )
+            if not rep.matches_sequential:
+                raced = True
+                break
+        assert raced

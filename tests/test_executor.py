@@ -1,0 +1,109 @@
+"""Threaded shared-memory executor: semantics, races, and sync accounting.
+
+This is where the paper's claims become falsifiable: a correctly
+synchronized program matches sequential execution under any adversarial
+schedule; removing a *needed* sync produces wrong answers; removing a
+*redundant* sync (per §4.2) never does.
+"""
+
+import pytest
+
+from repro.core import (
+    analyze,
+    insert_synchronization,
+    paper_alg1,
+    paper_alg4,
+    paper_alg6,
+    parallelize,
+    run_threaded,
+    strip_dependences,
+)
+from repro.core.dependence import paper_alg4_dependences
+
+
+class TestCorrectSync:
+    def test_alg4_full_sync_matches_sequential(self):
+        prog = paper_alg4(8)
+        sync = insert_synchronization(prog, analyze(prog))
+        rep = run_threaded(sync)
+        assert rep.matches_sequential
+
+    def test_alg4_full_sync_under_adversarial_stalls(self):
+        prog = paper_alg4(6)
+        sync = insert_synchronization(prog, analyze(prog))
+        rep = run_threaded(
+            sync, stalls={("S2", (1,)): 0.2, ("S3", (2,)): 0.1}
+        )
+        assert rep.matches_sequential
+        assert rep.stats.blocked_waits > 0  # the stalls actually forced waits
+
+    def test_alg1_sync_matches(self):
+        prog = paper_alg1(8)
+        sync = insert_synchronization(prog, analyze(prog))
+        assert run_threaded(sync).matches_sequential
+
+
+class TestPaperAlg5Race:
+    def test_paper_alg5_misses_a_dependence(self):
+        """The paper's Alg. 5 (built from its stated 3-dep graph) omits the
+        S2 δf(b,Δ=1) S1 dependence.  Stalling S2 at iteration 1 makes S1 at
+        iteration 2 read b[1] before it is written — wrong results.  Our
+        analyzer's 4-dep graph fixes this (previous test)."""
+
+        prog = paper_alg4(6)
+        alg5 = insert_synchronization(prog, paper_alg4_dependences())
+        rep = run_threaded(alg5, stalls={("S2", (1,)): 0.3})
+        assert not rep.matches_sequential
+
+    def test_removing_needed_sync_breaks(self):
+        """Dropping a retained (non-redundant) dependence's sync is unsafe."""
+
+        prog = paper_alg6(6)
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps)
+        # strip the *retained* Δ=1 dep (the wrong one to remove)
+        keep_wrong = [d for d in deps if d.delta == 1]
+        broken = strip_dependences(sync, keep_wrong)
+        rep = run_threaded(broken, stalls={("S3", (1,)): 0.3})
+        assert not rep.matches_sequential
+
+
+class TestOptimizedSyncStillCorrect:
+    @pytest.mark.parametrize("method", ["isd", "pattern", "both"])
+    def test_alg6_optimized(self, method):
+        rep = parallelize(paper_alg6(6), method=method)
+        run = run_threaded(
+            rep.optimized_sync, stalls={("S3", (1,)): 0.15, ("S2", (2,)): 0.1}
+        )
+        assert run.matches_sequential
+
+    def test_alg4_optimized(self):
+        rep = parallelize(paper_alg4(6), method="isd")
+        run = run_threaded(rep.optimized_sync, stalls={("S2", (1,)): 0.15})
+        assert run.matches_sequential
+
+    def test_sync_ops_reduced(self):
+        rep = parallelize(paper_alg6(8), method="isd")
+        naive = run_threaded(rep.naive_sync)
+        opt = run_threaded(rep.optimized_sync)
+        assert naive.matches_sequential and opt.matches_sequential
+        assert opt.stats.waits < naive.stats.waits
+        assert opt.stats.sends < naive.stats.sends
+
+
+class TestDSWPModel:
+    def test_pipelined_execution_matches(self):
+        """One thread per statement (Fig. 4), Δ=0 deps synchronized."""
+
+        prog = paper_alg4(6)
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps, model="dswp")
+        rep = run_threaded(sync, model="dswp", stalls={("S1", (2,)): 0.1})
+        assert rep.matches_sequential
+        assert rep.stats.threads == 3  # one per statement
+
+    def test_dswp_without_sync_races(self):
+        prog = paper_alg4(6)
+        sync = insert_synchronization(prog, [], model="dswp")  # no deps → no sync
+        rep = run_threaded(sync, model="dswp", stalls={("S2", (0,)): 0.25})
+        assert not rep.matches_sequential

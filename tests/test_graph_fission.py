@@ -1,0 +1,141 @@
+"""SCC / topological sort / loop fission — paper §3 (Alg. 1 → Alg. 2 → Alg. 3)."""
+
+import pytest
+
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    analyze,
+    fission,
+    paper_alg1,
+    paper_alg4,
+    run_sequential,
+)
+from repro.core.dependence import paper_alg4_dependences
+from repro.core.executor import run_loops_sequence
+from repro.core.graph import (
+    CondensedGraph,
+    DepGraph,
+    condense,
+    pipeline_stages,
+    tarjan_scc,
+    topological_order,
+)
+
+
+class TestSCC:
+    def test_alg4_paper_graph_scc(self):
+        """With the paper's 3-dep graph, {S2,S3} form the SCC (cycle via
+        b/c), S1 stays alone (§3.2)."""
+
+        prog = paper_alg4()
+        graph = DepGraph.build(prog, paper_alg4_dependences())
+        cond = condense(graph)
+        comps = {n.statements for n in cond.nodes}
+        assert frozenset({"S2", "S3"}) in comps
+        assert frozenset({"S1"}) in comps
+
+    def test_alg4_full_graph_is_one_scc(self):
+        """With the missed S2→S1 dep included, the cycle closes through S1."""
+
+        prog = paper_alg4()
+        cond = condense(DepGraph.build(prog, analyze(prog)))
+        assert {n.statements for n in cond.nodes} == {
+            frozenset({"S1", "S2", "S3"})
+        }
+
+    def test_tarjan_on_dag(self):
+        adj = {"a": ["b"], "b": ["c"], "c": []}
+        sccs = tarjan_scc(["a", "b", "c"], adj)
+        assert all(len(s) == 1 for s in sccs)
+
+    def test_tarjan_two_cycles(self):
+        adj = {"a": ["b"], "b": ["a", "c"], "c": ["d"], "d": ["c"]}
+        sccs = {frozenset(s) for s in tarjan_scc(list("abcd"), adj)}
+        assert sccs == {frozenset("ab"), frozenset("cd")}
+
+    def test_self_cycle_not_parallel(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("a", -1),)),
+            ),
+            bounds=((1, 5),),
+        )
+        cond = condense(DepGraph.build(prog, analyze(prog)))
+        assert not cond.nodes[0].is_parallel
+
+
+class TestTopoAndFission:
+    def test_alg2_topological_order(self):
+        """The paper's valid order for Alg. 1 is S2, S1, S4, S3 (Fig. 3b)."""
+
+        prog = paper_alg1()
+        cond = condense(DepGraph.build(prog, analyze(prog)))
+        order = topological_order(cond, prog)
+        labels = [sorted(cond.nodes[k].statements) for k in order]
+        assert labels == [["S2"], ["S1"], ["S4"], ["S3"]]
+
+    def test_alg3_fission_groups_s1_s4(self):
+        res = fission(paper_alg1())
+        assert res.loop_names() == [("S2",), ("S1", "S4"), ("S3",)]
+        assert all(l.parallel for l in res.loops)
+
+    def test_alg2_fission_without_regroup(self):
+        res = fission(paper_alg1(), regroup=False)
+        assert res.loop_names() == [("S2",), ("S1",), ("S4",), ("S3",)]
+
+    def test_fission_preserves_semantics(self):
+        prog = paper_alg1(10)
+        res = fission(prog)
+        expect = run_sequential(prog)
+        got = run_loops_sequence(res.loops, prog)
+        assert got == expect
+
+    def test_fission_parallel_loops_safe_under_reversal(self):
+        """run_loops_sequence executes parallel loops in *reversed* iteration
+        order — only legal because fission removed loop-carried deps."""
+
+        prog = paper_alg1(12)
+        res = fission(prog, regroup=True)
+        assert run_loops_sequence(res.loops, prog) == run_sequential(prog)
+
+    def test_regroup_requires_shared_reads(self):
+        # S1 reads b, S4 reads e (disjoint) → no locality grouping
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -1),)),
+                Statement("S2", ArrayRef("b", 0), (ArrayRef("c", -1),)),
+                Statement(
+                    "S3",
+                    ArrayRef("t", 0),
+                    (ArrayRef("a", -1), ArrayRef("b", 0), ArrayRef("d", -2)),
+                ),
+                Statement("S4", ArrayRef("d", 0), (ArrayRef("e", -2),)),
+            ),
+            bounds=((1, 8),),
+        )
+        res = fission(prog)
+        assert ("S1", "S4") not in res.loop_names()
+
+
+class TestPipelineStages:
+    def test_dswp_stage_assignment(self):
+        """Fig. 4: the SCC is pipelined across threads in topological order."""
+
+        prog = paper_alg4()
+        cond = condense(DepGraph.build(prog, paper_alg4_dependences()))
+        stages = pipeline_stages(cond, prog, num_threads=2)
+        assert len(stages) == 2
+        flat = [s for stage in stages for k in stage for s in cond.nodes[k].statements]
+        assert set(flat) == {"S1", "S2", "S3"}
+
+    def test_stage_order_respects_topology(self):
+        prog = paper_alg1()
+        cond = condense(DepGraph.build(prog, analyze(prog)))
+        stages = pipeline_stages(cond, prog, num_threads=4)
+        seen = []
+        for st in stages:
+            for k in st:
+                seen.append(k)
+        assert seen == topological_order(cond, prog)

@@ -1,0 +1,254 @@
+"""Launch layer: sharding rules (divisibility across every cell), HLO
+collective parser, analytic cost model, mesh helpers, input specs.
+
+Everything here is device-free (fake meshes / synthetic HLO), so it runs in
+milliseconds and still pins down the invariants the 512-device dry-run
+depends on.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHITECTURES, SHAPES, cell_is_applicable, get_config
+from repro.launch import analytic, hlo_analysis
+from repro.launch.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    fsdp_pspecs,
+    param_spec,
+    params_pspecs,
+)
+from repro.models import model_zoo as zoo
+
+
+class FakeMesh:
+    """Shape-only stand-in for a jax Mesh (sharding rules never touch
+    devices)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH1 = FakeMesh(data=16, model=16)
+MESH2 = FakeMesh(pod=2, data=16, model=16)
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return n
+
+
+def _assert_divisible(tree_specs, tree_shapes, mesh, where):
+    def walk(path, spec, leaf):
+        dims = list(leaf.shape)
+        entries = tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))
+        for dim, ax in zip(dims, entries):
+            size = _axis_size(mesh, ax)
+            assert dim % size == 0, (
+                f"{where}: {jax.tree_util.keystr(path)} shape {leaf.shape} "
+                f"spec {spec} — {dim} % {size}"
+            )
+
+    jax.tree_util.tree_map_with_path(
+        walk, tree_specs, tree_shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["pod", "multipod"])
+class TestShardingDivisibility:
+    def test_params_divisible(self, arch, mesh):
+        cfg = get_config(arch)
+        shapes = zoo.abstract_params(cfg)
+        specs = params_pspecs(cfg, mesh, shapes)
+        _assert_divisible(specs, shapes, mesh, f"{arch} params")
+
+    def test_fsdp_divisible(self, arch, mesh):
+        cfg = get_config(arch)
+        shapes = zoo.abstract_params(cfg)
+        specs = fsdp_pspecs(cfg, mesh, shapes)
+        _assert_divisible(specs, shapes, mesh, f"{arch} fsdp")
+
+    def test_fsdp_never_shards_stack_dim(self, arch, mesh):
+        cfg = get_config(arch)
+        shapes = zoo.abstract_params(cfg)
+        specs = fsdp_pspecs(cfg, mesh, shapes)
+
+        def walk(path, spec, leaf):
+            names = tuple(
+                p.key if hasattr(p, "key") else str(p) for p in path
+            )
+            if any(n in ("blocks", "enc_blocks", "dec_blocks") for n in names):
+                if len(tuple(spec)):
+                    assert tuple(spec)[0] is None
+
+        jax.tree_util.tree_map_with_path(
+            walk, specs, shapes, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    def test_caches_divisible(self, arch, mesh):
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape.kind == "train":
+                continue
+            ok, _ = cell_is_applicable(cfg, shape)
+            if not ok:
+                continue
+            cache = zoo.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            specs = cache_pspecs(cfg, mesh, cache)
+            _assert_divisible(specs, cache, mesh, f"{arch}/{shape.name} cache")
+
+
+class TestParamSpecRules:
+    def test_vocab_sharded_after_padding(self):
+        cfg = get_config("granite_3_2b")  # vocab 49155 → padded 49664
+        spec = param_spec(("embed", "tok"), (cfg.padded_vocab_size, 2048), cfg, MESH1)
+        assert spec[0] == "model"
+
+    def test_padded_heads_shard(self):
+        cfg = get_config("llava_next_34b")  # 56 → 64 heads
+        assert cfg.padded_num_heads == 64
+        spec = param_spec(
+            ("blocks", "pos0", "attn", "wq"), (60, 7168, 64, 128), cfg, MESH1
+        )
+        assert spec == P(None, None, "model", None)
+
+    def test_small_kv_heads_replicated(self):
+        cfg = get_config("yi_6b")  # kv=4 < 16
+        spec = param_spec(
+            ("blocks", "pos0", "attn", "wk"), (32, 4096, 4, 128), cfg, MESH1
+        )
+        assert spec == P(None, None, None, None)
+
+    def test_norms_replicated(self):
+        cfg = get_config("yi_6b")
+        spec = param_spec(
+            ("blocks", "pos0", "norm1", "scale"), (32, 4096), cfg, MESH1
+        )
+        assert spec == P(None, None)
+
+
+class TestCacheSpecRules:
+    def test_seq_takes_model_when_kv_small(self):
+        cfg = get_config("internlm2_20b")  # kv=8
+        cache = zoo.abstract_cache(cfg, 128, 32768)
+        specs = cache_pspecs(cfg, MESH1, cache)
+        k_spec = specs["blocks"]["pos0"]["k"]
+        assert k_spec == P(None, "data", "model", None, None)
+
+    def test_batch1_seq_takes_all_axes(self):
+        cfg = get_config("jamba_v01_52b")
+        cache = zoo.abstract_cache(cfg, 1, 524288)
+        specs = cache_pspecs(cfg, MESH1, cache)
+        k_spec = specs["blocks"]["pos4"]["k"]  # the attention position
+        assert k_spec[2] == ("data", "model")
+
+    def test_quantized_cache_specs(self):
+        cfg = get_config("deepseek_moe_16b").scaled(kv_quant=True)
+        cache = zoo.abstract_cache(cfg, 128, 32768)
+        specs = cache_pspecs(cfg, MESH1, cache)
+        assert specs["blocks"]["pos0"]["k_q"][1] == "data"
+        assert specs["blocks"]["pos0"]["k_s"][1] == "data"
+
+
+class TestHLOParser:
+    HLO = """
+  %ar = f32[16,4096]{1,0} all-reduce(f32[16,4096]{1,0} %x), replica_groups={}
+  %ag = bf16[256,128]{1,0} all-gather(bf16[16,128]{1,0} %y), dimensions={0}
+  %rs = bf16[16,128]{1,0} reduce-scatter(bf16[256,128]{1,0} %z), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8]{1,0} %w), channel_id=1
+  %dot = f32[4,4]{1,0} dot(f32[4,4]{1,0} %a, f32[4,4]{1,0} %b)
+"""
+
+    def test_counts(self):
+        stats = hlo_analysis.parse_collectives(self.HLO)
+        assert stats.counts == {
+            "all-reduce": 1,
+            "all-gather": 1,
+            "reduce-scatter": 1,
+            "collective-permute": 1,
+        }
+
+    def test_traffic_heuristics(self):
+        stats = hlo_analysis.parse_collectives(self.HLO)
+        assert stats.bytes_by_kind["all-reduce"] == 2 * 16 * 4096 * 4
+        assert stats.bytes_by_kind["all-gather"] == 256 * 128 * 2
+        assert stats.bytes_by_kind["reduce-scatter"] == 256 * 128 * 2
+        assert stats.bytes_by_kind["collective-permute"] == 8 * 8 * 2
+
+    def test_f32_adjustment(self):
+        stats = hlo_analysis.parse_collectives(self.HLO)
+        ar = 2 * 16 * 4096 * 4
+        assert stats.f32_bytes == ar
+        assert stats.tpu_adjusted_bytes == stats.total_bytes - ar // 2
+
+    def test_roofline_terms(self):
+        t = hlo_analysis.roofline(
+            flops_per_chip=197e12,
+            bytes_per_chip=819e9,
+            collective_bytes_per_chip=50e9,
+            model_flops=197e12 * 256,
+            chips=256,
+        )
+        assert abs(t.compute_s - 1.0) < 1e-9
+        assert abs(t.memory_s - 1.0) < 1e-9
+        assert abs(t.collective_s - 1.0) < 1e-9
+        assert t.mfu == pytest.approx(1.0)
+
+
+class TestAnalyticModel:
+    def test_dense_train_flops_match_6nd(self):
+        from repro.configs.base import shape_by_name
+
+        cfg = get_config("yi_6b")
+        shape = shape_by_name("train_4k")
+        n = 6_000_000_000
+        flops = analytic.step_flops(cfg, shape, n)
+        # (3 + remat) × 2·N·D plus attention — within 2× of 8·N·D
+        base = 8 * n * shape.global_batch * shape.seq_len
+        assert base < flops < 2 * base
+
+    def test_decode_linear_in_cache(self):
+        from repro.configs.base import shape_by_name
+
+        cfg = get_config("yi_6b")
+        s1 = analytic.forward_flops(cfg, shape_by_name("decode_32k"), 10**9)
+        # attention part scales with S; linear part with B — just sanity
+        assert s1 > 0
+
+    def test_kv_quant_halves_cache_bytes(self):
+        from repro.configs.base import shape_by_name
+
+        cfg = get_config("yi_6b")
+        shape = shape_by_name("decode_32k")
+        full = analytic._cache_bytes_total(cfg, shape)
+        quant = analytic._cache_bytes_total(cfg.scaled(kv_quant=True), shape)
+        assert quant < 0.55 * full
+
+    def test_window_caps_attention(self):
+        from repro.configs.base import shape_by_name
+
+        gem = get_config("gemma3_27b")   # 5:1 local, window 1024
+        shape = shape_by_name("prefill_32k")
+        f_local = analytic._attn_layer_flops_fwd(gem, 32768, 32768, True, 1024)
+        f_full = analytic._attn_layer_flops_fwd(gem, 32768, 32768, True, None)
+        assert f_local < 0.1 * f_full
+
+
+class TestMeshHelpers:
+    def test_data_axes(self):
+        from repro.launch.mesh import data_axes
+
+        assert data_axes(MESH1) == ("data",)
+        assert data_axes(MESH2) == ("pod", "data")

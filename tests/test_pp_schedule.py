@@ -1,0 +1,121 @@
+"""Pipeline-schedule lift of the sync optimizer (core/schedule.py)."""
+
+import pytest
+
+from repro.core import (
+    StageGraph,
+    analyze,
+    insert_synchronization,
+    plan_pipeline_sync,
+    run_threaded,
+)
+from repro.core.schedule import build_pipeline_program, events_by_kind, stage_of
+
+
+class TestChainPipeline:
+    def test_plain_chain_keeps_all_handoffs(self):
+        plan = plan_pipeline_sync(StageGraph(num_stages=4, num_microbatches=3))
+        assert len(plan.events) == 3  # F0→F1, F1→F2, F2→F3
+        assert len(plan.elimination.eliminated) == 0
+
+    def test_chain_events_are_neighbor_hops(self):
+        plan = plan_pipeline_sync(StageGraph(num_stages=5, num_microbatches=2))
+        for e in plan.events:
+            assert stage_of(e.dst_stmt) - stage_of(e.src_stmt) == 1
+            assert e.distance == 0
+
+
+class TestSkipElimination:
+    def test_skip_dependences_eliminated(self):
+        """Encoder-output fan-out (whisper-style): stage 0 feeds stages 2..5;
+        the chain hand-offs transitively cover every skip."""
+
+        S = 6
+        skips = tuple((0, d) for d in range(2, S))
+        plan = plan_pipeline_sync(
+            StageGraph(num_stages=S, num_microbatches=3, skips=skips)
+        )
+        assert len(plan.elimination.eliminated) == len(skips)
+        assert len(plan.events) == S - 1  # only the chain remains
+
+    def test_sync_reduction_grows_with_fanout(self):
+        for S in (4, 8, 12):
+            skips = tuple((0, d) for d in range(2, S))
+            plan = plan_pipeline_sync(
+                StageGraph(num_stages=S, num_microbatches=2, skips=skips)
+            )
+            s = plan.summary()
+            assert (
+                s["synchronized_deps_naive"] - s["synchronized_deps_optimized"]
+                == S - 2
+            )
+
+    def test_cross_stage_residual(self):
+        plan = plan_pipeline_sync(
+            StageGraph(num_stages=4, num_microbatches=2, skips=((1, 3),))
+        )
+        gone = {(d.source, d.sink) for d in plan.elimination.eliminated}
+        assert ("F1", "F3") in gone
+
+
+class TestBackwardAndAccumulation:
+    def test_grad_accumulation_chain_is_free(self):
+        """The gacc self-chain is per-stage (same processor) — no sync."""
+
+        plan = plan_pipeline_sync(
+            StageGraph(
+                num_stages=3,
+                num_microbatches=4,
+                with_backward=True,
+                grad_accumulation=True,
+            )
+        )
+        for e in plan.events:
+            # accumulation statements only ever sync locally (same stage)
+            if e.src_stmt.startswith("A") or e.dst_stmt.startswith("A"):
+                assert stage_of(e.src_stmt) == stage_of(e.dst_stmt)
+
+    def test_backward_chain_retained(self):
+        plan = plan_pipeline_sync(
+            StageGraph(num_stages=3, num_microbatches=3, with_backward=True)
+        )
+        pairs = {(e.src_stmt, e.dst_stmt) for e in plan.events}
+        assert ("B2", "B1") in pairs or ("B1", "B0") in pairs
+
+    def test_dswp_execution_of_plan_is_correct(self):
+        """Execute the optimized pipeline program on one thread per statement
+        with the retained sync only — results must match sequential."""
+
+        graph = StageGraph(
+            num_stages=3, num_microbatches=4, skips=((0, 2),)
+        )
+        plan = plan_pipeline_sync(graph)
+        rep = run_threaded(
+            plan.optimized_sync,
+            model="dswp",
+            stalls={("F1", (1,)): 0.1},
+        )
+        assert rep.matches_sequential
+
+    def test_dswp_naive_also_correct_but_more_syncs(self):
+        graph = StageGraph(num_stages=4, num_microbatches=3, skips=((0, 2), (0, 3)))
+        plan = plan_pipeline_sync(graph)
+        naive = run_threaded(plan.naive_sync, model="dswp")
+        opt = run_threaded(plan.optimized_sync, model="dswp")
+        assert naive.matches_sequential and opt.matches_sequential
+        assert opt.stats.waits < naive.stats.waits
+
+
+class TestEventClassification:
+    def test_events_by_kind(self):
+        plan = plan_pipeline_sync(
+            StageGraph(num_stages=3, num_microbatches=2, with_backward=True)
+        )
+        kinds = events_by_kind(plan)
+        assert all(
+            stage_of(e.src_stmt) != stage_of(e.dst_stmt)
+            for e in kinds["cross_stage"]
+        )
+        assert all(
+            stage_of(e.src_stmt) == stage_of(e.dst_stmt) for e in kinds["local"]
+        )

@@ -1,0 +1,232 @@
+"""Hypothesis property tests for the system's central invariant:
+
+    *Any* loop program, synchronized after elimination, still produces
+    sequential semantics on real threads — i.e. the eliminations of §4.2
+    never remove a needed synchronization.
+
+Programs are drawn with random statement counts, array access offsets and
+loop bounds; the adversarial scheduler injects stalls derived from the same
+draw so thread interleavings vary deterministically per example.
+"""
+
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    analyze,
+    eliminate_transitive,
+    fission,
+    insert_synchronization,
+    parallelize,
+    run_sequential,
+    run_threaded,
+)
+from repro.core.executor import run_loops_sequence
+
+ARRAYS = ["a", "b", "c", "d"]
+
+
+@st.composite
+def loop_programs(draw):
+    n_stmt = draw(st.integers(min_value=1, max_value=4))
+    n_iter = draw(st.integers(min_value=3, max_value=6))
+    stmts = []
+    for k in range(n_stmt):
+        warr = draw(st.sampled_from(ARRAYS))
+        n_reads = draw(st.integers(min_value=0, max_value=3))
+        reads = tuple(
+            ArrayRef(
+                draw(st.sampled_from(ARRAYS)),
+                draw(st.integers(min_value=-3, max_value=0)),
+            )
+            for _ in range(n_reads)
+        )
+        stmts.append(Statement(f"S{k+1}", ArrayRef(warr, 0), reads))
+    return LoopProgram(statements=tuple(stmts), bounds=((1, 1 + n_iter),))
+
+
+@st.composite
+def programs_with_stalls(draw):
+    prog = draw(loop_programs())
+    stalls = {}
+    n_stalls = draw(st.integers(min_value=0, max_value=2))
+    for _ in range(n_stalls):
+        stmt = draw(st.sampled_from([s.name for s in prog.statements]))
+        it = draw(
+            st.integers(min_value=prog.bounds[0][0], max_value=prog.bounds[0][1] - 1)
+        )
+        stalls[(stmt, (it,))] = 0.02
+    return prog, stalls
+
+
+common = settings(
+    max_examples=30,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+class TestSyncSoundness:
+    @common
+    @given(programs_with_stalls())
+    def test_naive_sync_preserves_semantics(self, case):
+        prog, stalls = case
+        sync = insert_synchronization(prog, analyze(prog))
+        assert run_threaded(sync, stalls=stalls).matches_sequential
+
+    @common
+    @given(programs_with_stalls())
+    def test_isd_optimized_sync_preserves_semantics(self, case):
+        prog, stalls = case
+        rep = parallelize(prog, method="isd")
+        assert run_threaded(rep.optimized_sync, stalls=stalls).matches_sequential
+
+    @common
+    @given(programs_with_stalls())
+    def test_pattern_optimized_sync_preserves_semantics(self, case):
+        prog, stalls = case
+        rep = parallelize(prog, method="pattern")
+        assert run_threaded(rep.optimized_sync, stalls=stalls).matches_sequential
+
+    @common
+    @given(programs_with_stalls())
+    def test_combined_methods_preserve_semantics(self, case):
+        prog, stalls = case
+        rep = parallelize(prog, method="both")
+        assert run_threaded(rep.optimized_sync, stalls=stalls).matches_sequential
+
+
+class TestEliminationInvariants:
+    @common
+    @given(loop_programs())
+    def test_elimination_is_monotone(self, prog):
+        """retained ∪ eliminated = loop-carried deps; no dep in both."""
+
+        deps = analyze(prog)
+        res = eliminate_transitive(prog, deps)
+        ret = {(d.source, d.sink, d.array, d.distance, d.kind) for d in res.retained}
+        elim = {(d.source, d.sink, d.array, d.distance, d.kind) for d in res.eliminated}
+        assert not (ret & elim)
+        carried = {
+            (d.source, d.sink, d.array, d.distance, d.kind)
+            for d in deps
+            if d.loop_carried
+        }
+        assert ret | elim == carried
+
+    @common
+    @given(loop_programs())
+    def test_witness_paths_are_valid(self, prog):
+        """Every witness path starts at the eliminated dep's source instance,
+        ends at its sink instance, and never uses the eliminated dep."""
+
+        deps = analyze(prog)
+        res = eliminate_transitive(prog, deps)
+        for dep, path in res.witnesses.items():
+            if not path:
+                continue
+            (s0, i0), (sn, iN) = path[0], path[-1]
+            assert s0 == dep.source and sn == dep.sink
+            assert tuple(a - b for a, b in zip(iN, i0)) == dep.distance
+
+    @common
+    @given(loop_programs())
+    def test_fission_preserves_semantics(self, prog):
+        res = fission(prog)
+        assert run_loops_sequence(res.loops, prog) == run_sequential(prog)
+
+
+class TestDSWPProperties:
+    """The same soundness invariant under the pipelined execution model:
+    one thread per statement, cross-statement deps synchronized."""
+
+    @common
+    @given(programs_with_stalls())
+    def test_dswp_naive_sync_preserves_semantics(self, case):
+        prog, stalls = case
+        from repro.core import analyze, insert_synchronization, run_threaded
+
+        sync = insert_synchronization(prog, analyze(prog), model="dswp")
+        rep = run_threaded(sync, stalls=stalls, model="dswp")
+        assert rep.matches_sequential
+
+    @common
+    @given(programs_with_stalls())
+    def test_dswp_optimized_sync_preserves_semantics(self, case):
+        prog, stalls = case
+        from repro.core import (
+            analyze,
+            eliminate_transitive,
+            insert_synchronization,
+            run_threaded,
+            strip_dependences,
+        )
+
+        deps = analyze(prog)
+        naive = insert_synchronization(prog, deps, model="dswp")
+        elim = eliminate_transitive(prog, deps, model="dswp")
+        opt = strip_dependences(naive, elim.eliminated)
+        rep = run_threaded(opt, stalls=stalls, model="dswp")
+        assert rep.matches_sequential
+
+
+class TestMultiDimElimination:
+    def test_2d_nest_transitive_reduction(self):
+        """2-D iteration space: a (1,1)-distance dep covered by (1,0) and
+        (0,1) deps via the doall program order."""
+
+        from repro.core import (
+            ArrayRef,
+            LoopProgram,
+            Statement,
+            analyze,
+            eliminate_transitive,
+        )
+
+        prog = LoopProgram(
+            statements=(
+                Statement(
+                    "S1",
+                    ArrayRef("a", (0, 0)),
+                    (ArrayRef("a", (-1, 0)), ArrayRef("a", (0, -1))),
+                ),
+                Statement(
+                    "S2",
+                    ArrayRef("c", (0, 0)),
+                    (ArrayRef("a", (-1, -1)),),
+                ),
+            ),
+            bounds=((0, 4), (0, 4)),
+        )
+        deps = analyze(prog)
+        res = eliminate_transitive(prog, deps)
+        gone = {(d.source, d.sink, d.distance) for d in res.eliminated}
+        # S1→S2 (1,1) covered by the S1 self-dep chain (1,0)+(0,1) plus
+        # program order S1(i+1,j+1)→S2(i+1,j+1)
+        assert ("S1", "S2", (1, 1)) in gone
+        retained = {(d.source, d.sink, d.distance) for d in res.retained}
+        assert ("S1", "S1", (1, 0)) in retained
+        assert ("S1", "S1", (0, 1)) in retained
+
+    def test_2d_semantics_preserved(self):
+        from repro.core import (
+            ArrayRef,
+            LoopProgram,
+            Statement,
+            parallelize,
+            run_threaded,
+        )
+
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 0)),)),
+                Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+            ),
+            bounds=((0, 3), (0, 3)),
+        )
+        rep = parallelize(prog, method="isd")
+        run = run_threaded(rep.optimized_sync, stalls={("S2", (0, 1)): 0.05})
+        assert run.matches_sequential

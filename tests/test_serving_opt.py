@@ -1,0 +1,132 @@
+"""Serving-path optimizations: int8 KV cache (scale-folded attention),
+grouped-GQA decode, and the MoE expert-sharding rule."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import attention as attn_lib
+from repro.models import model_zoo as zoo
+
+
+class TestQuantizedKV:
+    def test_quantize_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+        q, s = attn_lib.quantize_kv(x)
+        back = attn_lib.dequantize_kv(q, s, x.dtype)
+        np.testing.assert_allclose(back, x, atol=float(jnp.max(jnp.abs(x))) / 100)
+
+    def test_scale_folding_equals_dequantize(self):
+        """decode_attention_q == decode_attention on the dequantized cache."""
+
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        B, S, KV, G, hd = 2, 12, 2, 3, 16
+        H = KV * G
+        q = jax.random.normal(ks[0], (B, 1, H, hd))
+        k = jax.random.normal(ks[1], (B, S, KV, hd))
+        v = jax.random.normal(ks[2], (B, S, KV, hd))
+        kq, ksc = attn_lib.quantize_kv(k)
+        vq, vsc = attn_lib.quantize_kv(v)
+        cache = {"k_q": kq, "k_s": ksc, "v_q": vq, "v_s": vsc}
+        out_q = attn_lib.decode_attention_q(q, cache, jnp.int32(S))
+        kd = attn_lib.dequantize_kv(kq, ksc, q.dtype)
+        vd = attn_lib.dequantize_kv(vq, vsc, q.dtype)
+        out_d = attn_lib.decode_attention(q, kd, vd, jnp.int32(S))
+        np.testing.assert_allclose(out_q, out_d, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("arch", ["yi_6b", "gemma3_27b", "mixtral_8x7b"])
+    def test_end_to_end_decode_close_to_fullprec(self, arch):
+        cfg = get_smoke_config(arch).scaled(dtype="float32", kv_quant=True)
+        if cfg.has_moe:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0)
+            )
+        params = zoo.init(jax.random.PRNGKey(0), cfg)
+        B, S, Smax = 2, 10, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        full, _ = zoo.forward_logits(params, {"tokens": toks}, cfg)
+        cache = zoo.init_cache(cfg, B, Smax)
+        _, cache = zoo.prefill(params, {"tokens": toks[:, :6]}, cfg, cache)
+        cl = 6
+        for t in range(6, S):
+            lg, cache = zoo.decode_step(
+                params, toks[:, t : t + 1], cfg, cache, jnp.int32(cl)
+            )
+            cl += 1
+            # int8 rounding: within ~1% of the logit scale
+            scale = float(jnp.max(jnp.abs(full[:, t])))
+            lim = max(0.05, 0.01 * min(scale, 100.0))
+            assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))) < lim
+
+    def test_cache_is_half_size(self):
+        cfg = get_smoke_config("yi_6b")
+        full = zoo.init_cache(cfg, 2, 64)
+        cfgq = cfg.scaled(kv_quant=True)
+        quant = zoo.init_cache(cfgq, 2, 64)
+        b_full = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(full))
+        b_q = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(quant))
+        assert b_q < 0.63 * b_full  # int8 + f32/head_dim scales
+
+
+class TestGroupedGQADecode:
+    @pytest.mark.parametrize("KV,G", [(1, 4), (2, 2), (4, 1)])
+    def test_matches_reference_row(self, KV, G):
+        H, hd, S = KV * G, 16, 12
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q_all = jax.random.normal(ks[0], (2, S, H, hd))
+        k_all = jax.random.normal(ks[1], (2, S, KV, hd))
+        v_all = jax.random.normal(ks[2], (2, S, KV, hd))
+        ref = attn_lib.attention_reference(q_all, k_all, v_all, causal=True)
+        out = attn_lib.decode_attention(
+            q_all[:, -1:], k_all, v_all, jnp.int32(S)
+        )
+        np.testing.assert_allclose(out[:, 0], ref[:, -1], atol=2e-5, rtol=2e-5)
+
+    def test_window_masking(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        S, W = 16, 5
+        q = jax.random.normal(ks[0], (1, S, 4, 8))
+        k = jax.random.normal(ks[1], (1, S, 2, 8))
+        v = jax.random.normal(ks[2], (1, S, 2, 8))
+        ref = attn_lib.attention_reference(q, k, v, causal=True, window=W)
+        out = attn_lib.decode_attention(q[:, -1:], k, v, jnp.int32(S), window=W)
+        np.testing.assert_allclose(out[:, 0], ref[:, -1], atol=2e-5, rtol=2e-5)
+
+
+class TestMoEShardRule:
+    def test_auto_prefers_ep_when_divisible(self):
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.launch.sharding import param_spec
+
+        cfg = get_config("deepseek_moe_16b")  # 64 experts, divisible by 16
+        mesh = None
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        spec = param_spec(
+            ("blocks", "pos0", "moe", "w_gate"), (28, 64, 2048, 1408), cfg, FakeMesh()
+        )
+        assert spec[1] == "model"  # experts dim sharded (EP)
+
+    def test_auto_falls_back_to_tp(self):
+        from repro.configs import get_config
+        from repro.launch.sharding import param_spec
+
+        cfg = get_config("mixtral_8x7b")  # 8 experts, not divisible by 16
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        spec = param_spec(
+            ("blocks", "pos0", "moe", "w_gate"), (32, 8, 4096, 14336), cfg, FakeMesh()
+        )
+        assert spec[1] is None and spec[3] == "model"  # ff sharded (TP)

@@ -1,0 +1,255 @@
+"""send/wait insertion (Alg. 5) and both elimination algorithms (§4.2)."""
+
+import pytest
+
+from repro.core import (
+    ArrayRef,
+    Dependence,
+    FLOW,
+    LoopProgram,
+    Statement,
+    analyze,
+    eliminate_pattern,
+    eliminate_transitive,
+    insert_synchronization,
+    isd_window,
+    paper_alg4,
+    paper_alg6,
+    parallelize,
+    prime_factors,
+    strip_dependences,
+)
+from repro.core.dependence import paper_alg4_dependences
+from repro.core.elimination import pattern_matches
+
+
+class TestAlg5Insertion:
+    """Reproduce Alg. 5 instruction-for-instruction from the paper's graph."""
+
+    def setup_method(self):
+        self.prog = paper_alg4()
+        self.sync = insert_synchronization(self.prog, paper_alg4_dependences())
+
+    def test_sends(self):
+        sends = {
+            name: [(s.reg,) for s in self.sync.post_sends[name]]
+            for name in self.prog.names
+        }
+        assert sends == {"S1": [(0,)], "S2": [(1,)], "S3": [(2,)]}
+
+    def test_waits(self):
+        w_s2 = self.sync.pre_waits["S2"]
+        assert [(w.reg, w.distance) for w in w_s2] == [(2, (1,))]
+        w_s3 = self.sync.pre_waits["S3"]
+        # Alg. 5 order: wait(1, i-2, b) then wait(0, i-1, a)
+        assert [(w.reg, w.distance) for w in w_s3] == [(1, (2,)), (0, (1,))]
+        assert self.sync.pre_waits["S1"] == ()
+
+    def test_instruction_count(self):
+        assert self.sync.sync_instruction_count() == {
+            "sends": 3,
+            "waits": 3,
+            "total": 6,
+        }
+
+    def test_pretty_matches_paper_shape(self):
+        text = self.sync.pretty()
+        assert "send(0, i, a)" in text
+        assert "wait(2, i-1, c)" in text
+        assert "wait(1, i-2, b)" in text
+        assert "wait(0, i-1, a)" in text
+        assert "send(2, i, c)" in text
+
+
+class TestWindowFormula:
+    """Paper: 'least product of the unique prime factors of the dependence
+    distance, plus one'."""
+
+    def test_prime_factors(self):
+        assert prime_factors(12) == {2, 3}
+        assert prime_factors(1) == set()
+        assert prime_factors(0) == set()
+        assert prime_factors(7) == {7}
+
+    def test_alg6_window_is_three(self):
+        assert isd_window([2, 1]) == 3  # the Fig. 6 dotted box
+
+    def test_window_examples(self):
+        assert isd_window([1]) == 2
+        assert isd_window([4]) == 5      # primes {2} → 3, but max_d+1 = 5
+        assert isd_window([6]) == 7
+        assert isd_window([2, 3]) == 7   # 2·3 + 1
+
+
+class TestAlg6Elimination:
+    def test_isd_eliminates_delta2(self):
+        prog = paper_alg6()
+        res = eliminate_transitive(prog, analyze(prog))
+        assert [d.pretty() for d in res.eliminated] == ["S1 δf(a, Δ=2) S3"]
+        assert [d.pretty() for d in res.retained] == ["S3 δf(c, Δ=1) S2"]
+
+    def test_witness_is_fig6_chain(self):
+        """The witness must be the alternating S2/S3 chain of Fig. 6
+        (anchored at the loop start): S1(i)→S2(i)→S3(i)→S2(i+1)→S3(i+1)→
+        S2(i+2)→S3(i+2)."""
+
+        prog = paper_alg6()
+        res = eliminate_transitive(prog, analyze(prog))
+        (path,) = res.witnesses.values()
+        names = [n for n, _ in path]
+        iters = [i[0] for _, i in path]
+        assert names == ["S1", "S2", "S3", "S2", "S3", "S2", "S3"]
+        assert iters == [1, 1, 1, 2, 2, 3, 3]
+
+    def test_pattern_eliminates_delta2(self):
+        prog = paper_alg6()
+        res = eliminate_pattern(prog, analyze(prog))
+        assert [d.pretty() for d in res.eliminated] == ["S1 δf(a, Δ=2) S3"]
+
+    def test_pattern_conditions(self):
+        prog = paper_alg6()
+        deps = analyze(prog)
+        de = next(d for d in deps if d.delta == 2)
+        dr = next(d for d in deps if d.delta == 1)
+        assert pattern_matches(prog, de, dr)
+        # δr itself can't be eliminated by δe (not backward from δe's view)
+        assert not pattern_matches(prog, dr, de)
+
+    def test_optimized_sync_halves_instructions(self):
+        rep = parallelize(paper_alg6(), method="isd")
+        assert rep.naive_sync.sync_instruction_count()["total"] == 4
+        assert rep.optimized_sync.sync_instruction_count()["total"] == 2
+
+
+class TestPatternConditionsNegative:
+    """Each of the five §4.2 conditions must individually gate elimination."""
+
+    def _mk(self, de_delta, dr_delta, de_src, de_snk, dr_src, dr_snk, prog=None):
+        prog = prog or paper_alg6()
+        de = Dependence(FLOW, de_src, de_snk, "a", (de_delta,))
+        dr = Dependence(FLOW, dr_src, dr_snk, "c", (dr_delta,))
+        return prog, de, dr
+
+    def test_iii_requires_lexically_backward(self):
+        # δr forward (S1→S2) fails condition iii
+        prog, de, dr = self._mk(2, 1, "S1", "S3", "S1", "S2")
+        assert not pattern_matches(prog, de, dr)
+
+    def test_iv_requires_unit_distance(self):
+        prog, de, dr = self._mk(4, 2, "S1", "S3", "S3", "S2")
+        assert not pattern_matches(prog, de, dr)
+
+    def test_v_requires_same_sign(self):
+        prog, de, dr = self._mk(2, -1, "S1", "S3", "S3", "S2")
+        assert not pattern_matches(prog, de, dr)
+
+    def test_i_requires_path_to_source(self):
+        # source(δe)=S3 lexically after source(δr)=S2 → no path (i)
+        prog, de, dr = self._mk(2, 1, "S3", "S3", "S2", "S1")
+        assert not pattern_matches(prog, de, dr)
+
+    def test_ii_requires_sink_reach(self):
+        # sink(δr)=S3 after sink(δe)=S1 → condition ii fails
+        prog, de, dr = self._mk(2, 1, "S1", "S1", "S3", "S3")
+        assert not pattern_matches(prog, de, dr)
+
+
+class TestTransitiveReductionGeneral:
+    def test_chain_covers_long_dependence(self):
+        """A Δ=1 dep between the same statements covers the Δ=3 one:
+        S2(i)→S1(i+1)→S2(i+1)→S1(i+2)→…→S1(i+3)."""
+
+        prog = LoopProgram(
+            statements=(
+                Statement(
+                    "S1",
+                    ArrayRef("a", 0),
+                    (ArrayRef("b", -1), ArrayRef("b", -3)),
+                ),
+                Statement("S2", ArrayRef("b", 0), (ArrayRef("a", 0),)),
+            ),
+            bounds=((1, 10),),
+        )
+        deps = analyze(prog)
+        res = eliminate_transitive(prog, deps)
+        gone = {(d.source, d.sink, d.distance) for d in res.eliminated}
+        assert ("S2", "S1", (3,)) in gone
+        retained = {(d.source, d.sink, d.distance) for d in res.retained}
+        assert ("S2", "S1", (1,)) in retained
+
+    def test_uncoverable_dependence_is_retained(self):
+        """A lone Δ=2 dep with no helpers must be retained."""
+
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), ()),
+                Statement("S2", ArrayRef("b", 0), (ArrayRef("a", -2),)),
+            ),
+            bounds=((1, 8),),
+        )
+        res = eliminate_transitive(prog, analyze(prog))
+        assert len(res.eliminated) == 0
+        assert len(res.retained) == 1
+
+    def test_multiple_deps_cooperate(self):
+        """Paper: 'It's possible for multiple dependence to work together to
+        eliminate another dependence.'  Δ=1 and Δ=2 deps jointly cover Δ=3."""
+
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), ()),
+                Statement("S2", ArrayRef("b", 0), (ArrayRef("a", -1),)),
+                Statement(
+                    "S3",
+                    ArrayRef("c", 0),
+                    (ArrayRef("b", -2), ArrayRef("a", -3)),
+                ),
+            ),
+            bounds=((1, 12),),
+        )
+        deps = analyze(prog)
+        res = eliminate_transitive(prog, deps)
+        gone = {(d.source, d.sink, d.distance) for d in res.eliminated}
+        # S1→S3 Δ3 covered by S1(i)→S2(i+1) [Δ1] → S3(i+3) [Δ2]:
+        # neither helper alone spans Δ3
+        assert ("S1", "S3", (3,)) in gone
+        assert len(res.retained) == 2
+        # sanity: each helper alone does NOT cover Δ3
+        from repro.core.elimination import _covered
+
+        de = next(d for d in deps if d.distance == (3,))
+        helpers = [d for d in deps if d.distance != (3,)]
+        for h in helpers:
+            ok, _ = _covered(prog, de, [h])
+            assert not ok
+
+    def test_strip_dependences_removes_pairs(self):
+        prog = paper_alg6()
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps)
+        res = eliminate_transitive(prog, deps)
+        stripped = strip_dependences(sync, res.eliminated)
+        assert stripped.sync_instruction_count()["total"] == 2
+        # the Δ=1 c-dep's pair survives
+        assert any(s.reg is not None for s in stripped.post_sends["S3"])
+        assert stripped.pre_waits["S3"] == ()
+
+
+class TestSendMerging:
+    def test_shared_source_shares_send(self):
+        """§4.2: a single send can synchronize several dependences."""
+
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), ()),
+                Statement("S2", ArrayRef("b", 0), (ArrayRef("a", -1),)),
+                Statement("S3", ArrayRef("c", 0), (ArrayRef("a", -3),)),
+            ),
+            bounds=((1, 8),),
+        )
+        deps = analyze(prog)
+        merged = insert_synchronization(prog, deps, merge=True)
+        unmerged = insert_synchronization(prog, deps, merge=False)
+        assert unmerged.sync_instruction_count()["sends"] == 2
+        assert merged.sync_instruction_count()["sends"] == 1
+        assert merged.sync_instruction_count()["waits"] == 2
