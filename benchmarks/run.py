@@ -22,10 +22,16 @@ Integration benches (the technique lifted into the distributed runtime):
 
 from __future__ import annotations
 
+import importlib.util
+import pathlib
+import sys
 import time
 from typing import Callable, List
 
 import numpy as np
+
+if importlib.util.find_spec("repro") is None:  # run from a bare checkout
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 
 def _timeit(fn: Callable, n: int = 5) -> float:
@@ -132,6 +138,65 @@ def bench_elim_scaling() -> None:
         float(np.mean(t_us)),
         f"random_programs=20 carried_deps={total_deps} "
         f"eliminated={total_elim} ({100*total_elim/max(total_deps,1):.0f}%)",
+    )
+
+
+def bench_wavefront_speedup() -> None:
+    """Threaded send/wait machine vs wavefront backend on the paper's Alg. 6
+    loop at 1024 iterations: wall time, runtime sync ops (naive/optimized)
+    and the wavefront's barrier count (its only synchronization)."""
+
+    from repro.core import parallelize, paper_alg6, run_threaded, run_wavefront
+
+    rep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+    t0 = time.perf_counter()
+    run_threaded(rep.optimized_sync, compare=False, timeout=120.0)
+    t_threaded = time.perf_counter() - t0
+    t_wavefront = (
+        _timeit(
+            lambda: run_wavefront(
+                rep.optimized_sync, schedule=rep.wavefront, compare=False
+            ),
+            n=3,
+        )
+        / 1e6
+    )
+    s = rep.summary()
+    _row(
+        "wavefront_speedup_alg6_1024",
+        t_wavefront * 1e6,
+        f"threaded_ms={t_threaded*1e3:.1f} wavefront_ms={t_wavefront*1e3:.1f} "
+        f"speedup={t_threaded/t_wavefront:.1f}x "
+        f"naive_sync_ops={s['naive_runtime_sync_ops']} "
+        f"optimized_sync_ops={s['optimized_runtime_sync_ops']} "
+        f"wavefront_barriers={rep.wavefront.depth}",
+    )
+
+
+def bench_wavefront_parallel_loop() -> None:
+    """A dependence-free (DOALL) 1024-iteration loop: the wavefront collapses
+    to depth == #statements with iteration-wide batches."""
+
+    from repro.core import ArrayRef, LoopProgram, Statement, parallelize, run_wavefront
+
+    prog = LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", 0), (ArrayRef("b", 0),)),
+            Statement("S2", ArrayRef("c", 0), (ArrayRef("a", 0), ArrayRef("b", 0))),
+        ),
+        bounds=((0, 1024),),
+    )
+    rep = parallelize(prog, method="isd", backend="wavefront")
+    us = _timeit(
+        lambda: run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False),
+        n=3,
+    )
+    wf = rep.wavefront
+    _row(
+        "wavefront_parallel_1024",
+        us,
+        f"depth={wf.depth} batched_ops={wf.batched_ops} "
+        f"instances={wf.instances} max_width={wf.max_width}",
     )
 
 
@@ -262,6 +327,8 @@ BENCHES = [
     bench_elim_pattern_alg6,
     bench_elim_scaling,
     bench_executor_sync_ops,
+    bench_wavefront_speedup,
+    bench_wavefront_parallel_loop,
     bench_pp_schedule,
     bench_kernel_pipeline,
     bench_grad_sync_batching,

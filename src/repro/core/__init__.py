@@ -34,6 +34,12 @@ from repro.core.sync import (
     insert_synchronization,
     strip_dependences,
 )
+from repro.core.wavefront import (
+    WavefrontError,
+    WavefrontSchedule,
+    run_wavefront,
+    schedule_wavefronts,
+)
 
 __all__ = [
     "ANTI",
@@ -53,6 +59,8 @@ __all__ = [
     "Statement",
     "SyncProgram",
     "Wait",
+    "WavefrontError",
+    "WavefrontSchedule",
     "analyze",
     "build_isd",
     "eliminate_pattern",
@@ -69,6 +77,8 @@ __all__ = [
     "prime_factors",
     "run_sequential",
     "run_threaded",
+    "run_wavefront",
+    "schedule_wavefronts",
     "strip_dependences",
     "synchronized_set",
 ]

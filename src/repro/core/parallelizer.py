@@ -25,6 +25,9 @@ from repro.core.elimination import (
 from repro.core.fission import FissionResult, fission
 from repro.core.ir import LoopProgram
 from repro.core.sync import SyncProgram, insert_synchronization, strip_dependences
+from repro.core.wavefront import WavefrontSchedule, schedule_wavefronts
+
+BACKENDS = ("threaded", "wavefront")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,11 +38,14 @@ class ParallelizationReport:
     naive_sync: SyncProgram
     elimination: EliminationResult
     optimized_sync: SyncProgram
+    backend: str = "threaded"
+    # level schedule of the optimized sync program (backend="wavefront" only)
+    wavefront: Optional[WavefrontSchedule] = None
 
     def summary(self) -> dict:
         naive = self.naive_sync.sync_instruction_count()
         opt = self.optimized_sync.sync_instruction_count()
-        return {
+        out = {
             "dependences": len(self.dependences),
             "loop_carried": len(loop_carried(self.dependences)),
             "eliminated": len(self.elimination.eliminated),
@@ -48,7 +54,12 @@ class ParallelizationReport:
             "naive_runtime_sync_ops": self.naive_sync.runtime_sync_ops(),
             "optimized_runtime_sync_ops": self.optimized_sync.runtime_sync_ops(),
             "method": self.elimination.method,
+            "backend": self.backend,
         }
+        if self.wavefront is not None:
+            out["wavefront_depth"] = self.wavefront.depth
+            out["wavefront_batched_ops"] = self.wavefront.batched_ops
+        return out
 
 
 def parallelize(
@@ -57,13 +68,25 @@ def parallelize(
     method: str = "isd",
     deps: Optional[Sequence[Dependence]] = None,
     merge_sends: bool = False,
+    backend: str = "threaded",
 ) -> ParallelizationReport:
     """Run the full §5 pipeline.
 
     ``method``: ``"isd"`` (transitive reduction), ``"pattern"`` (Li &
     Abu-Sufah matching), ``"both"`` (pattern first — cheap — then ISD on the
     survivors), or ``"none"`` (naive synchronization only).
+
+    ``backend``: ``"threaded"`` targets the send/wait machine
+    (:func:`repro.core.executor.run_threaded`); ``"wavefront"`` additionally
+    compiles the optimized sync program to a dependence-level schedule for
+    :func:`repro.core.wavefront.run_wavefront` — O(depth) vectorized steps
+    instead of O(iterations) threads.
     """
+
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}"
+        )
 
     dep_list = list(deps) if deps is not None else analyze(prog)
     fiss = fission(prog, dep_list)
@@ -97,6 +120,9 @@ def parallelize(
         optimized = insert_synchronization(
             prog, list(elim.retained), merge=True
         )
+    wavefront = None
+    if backend == "wavefront":
+        wavefront = schedule_wavefronts(optimized, list(elim.retained))
     return ParallelizationReport(
         program=prog,
         dependences=tuple(dep_list),
@@ -104,4 +130,6 @@ def parallelize(
         naive_sync=naive,
         elimination=elim,
         optimized_sync=optimized,
+        backend=backend,
+        wavefront=wavefront,
     )

@@ -1,0 +1,475 @@
+"""Wavefront (level-synchronous) execution backend for SyncPrograms.
+
+The threaded executor (:mod:`repro.core.executor`) is the paper's machine in
+miniature — one thread per iteration, cross-iteration order enforced only by
+send/wait — which makes it a fine oracle and a hopeless fast path: a run of
+``n`` iterations costs ``n`` OS threads plus a send/wait round-trip per
+retained dependence instance.  This module replaces that with *static*
+scheduling in the style of graph-based dependence layering (Alluru &
+Jeganathan, arXiv:2102.09317; Baghdadi et al., arXiv:1111.6756):
+
+  1. materialize the ISD over the loop's *actual* bounds — nodes are
+     statement instances ``S_k(i)``, edges are exactly the orders the sync
+     program's execution model enforces (free orders of the model + the
+     retained synchronized dependences);
+  2. compute each instance's *dependence level* by longest-path layering
+     (level = length of the longest enforced-order chain reaching it);
+  3. lower each level to one batched statement evaluation per (statement,
+     level) group — a single vectorized NumPy gather/compute/scatter.
+
+Soundness rides on the elimination invariant of §4.2: every true dependence
+of the program is covered by a path of enforced-order edges, every enforced
+edge strictly increases the level, hence any two instances sharing a level
+are mutually independent and may execute in one batch, in any order.
+
+The layering is only defined when the enforced-order instance graph is
+acyclic.  Mixed-sign distance components (a Δ-sign mix such as retaining
+both ``(1, -1)`` and ``(-1, 1)`` edges) can close cycles through the
+iteration space; those are rejected with :class:`WavefrontError` carrying a
+diagnostic rather than silently mis-scheduling.
+
+Three executors now coexist (see ROADMAP "Execution backends"):
+
+  * :func:`repro.core.ir.run_sequential` — the semantic oracle;
+  * :func:`repro.core.executor.run_threaded` — the paper's machine, used to
+    demonstrate races and count send/wait traffic;
+  * :func:`run_wavefront` (here) — the fast path: O(depth) vectorized steps
+    instead of O(iterations) threads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dependence import Dependence
+from repro.core.ir import LoopProgram, run_sequential
+from repro.core.isd import Instance, build_isd
+from repro.core.sync import SyncProgram
+
+
+class WavefrontError(ValueError):
+    """The enforced-order instance graph admits no wavefront layering."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WavefrontGroup:
+    """One batched evaluation: ``statement`` at every iteration in the group."""
+
+    statement: str
+    iterations: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def width(self) -> int:
+        return len(self.iterations)
+
+
+@dataclasses.dataclass(frozen=True)
+class WavefrontSchedule:
+    """Dependence-level layering of a sync program's instance space."""
+
+    program: LoopProgram
+    levels: Tuple[Tuple[WavefrontGroup, ...], ...]
+    model: str
+    retained: Tuple[Dependence, ...]
+
+    # ------------------------------------------------------------------ #
+    @property
+    def depth(self) -> int:
+        """Number of wavefronts — the O(depth) step count of the backend."""
+
+        return len(self.levels)
+
+    @functools.cached_property
+    def batched_ops(self) -> int:
+        """Total vectorized statement evaluations across all levels."""
+
+        return sum(len(level) for level in self.levels)
+
+    @functools.cached_property
+    def instances(self) -> int:
+        return sum(g.width for level in self.levels for g in level)
+
+    @functools.cached_property
+    def max_width(self) -> int:
+        widths = [g.width for level in self.levels for g in level]
+        return max(widths) if widths else 0
+
+    def level_of(self) -> Dict[Instance, int]:
+        """Instance → level index (inverse of ``levels``; test/debug aid)."""
+
+        out: Dict[Instance, int] = {}
+        for lvl, groups in enumerate(self.levels):
+            for g in groups:
+                for it in g.iterations:
+                    out[(g.statement, it)] = lvl
+        return out
+
+    def summary(self) -> dict:
+        return {
+            "depth": self.depth,
+            "batched_ops": self.batched_ops,
+            "instances": self.instances,
+            "max_width": self.max_width,
+            "model": self.model,
+            "retained": [d.pretty() for d in self.retained],
+        }
+
+
+def _sync_dependences(sync: SyncProgram) -> List[Dependence]:
+    """The dependences a SyncProgram actually synchronizes (its registers)."""
+
+    out: List[Dependence] = []
+    seen = set()
+    for ds in sync.registers.values():
+        for d in ds:
+            key = (d.kind, d.source, d.sink, d.array, d.distance)
+            if key not in seen:
+                seen.add(key)
+                out.append(d)
+    return out
+
+
+def schedule_wavefronts(
+    sync: SyncProgram,
+    retained: Optional[Sequence[Dependence]] = None,
+    *,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
+) -> WavefrontSchedule:
+    """Longest-path dependence-level layering over the ISD.
+
+    ``retained`` defaults to the dependences ``sync`` synchronizes (its
+    register table) — pass ``EliminationResult.retained`` explicitly when
+    scheduling straight from a compiler report.  Raises
+    :class:`WavefrontError` when the layering does not exist (negative
+    distance components / cyclic Δ-sign mixes).
+    """
+
+    deps = list(retained) if retained is not None else _sync_dependences(sync)
+    return schedule_levels(
+        sync.program, deps, model=model, processors=processors
+    )
+
+
+def schedule_levels(
+    prog: LoopProgram,
+    retained: Sequence[Dependence],
+    *,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
+) -> WavefrontSchedule:
+    """Layer a bare :class:`LoopProgram` given its retained dependences.
+
+    The sync-program-independent core of :func:`schedule_wavefronts`; used
+    directly by the Pallas K-loop plan, whose enforced orders come from an
+    explicit processor map rather than a send/wait program.
+    """
+
+    deps = list(retained)
+
+    negative = [d for d in deps if any(x < 0 for x in d.distance)]
+    if negative:
+        raise WavefrontError(
+            "wavefront layering conservatively requires per-dimension "
+            "non-negative dependence distances (the ISD precondition); "
+            "rejected: "
+            + "; ".join(d.pretty() for d in negative)
+            + " — mixed-sign distance vectors (a Δ-sign mix) can close "
+            "cycles through the iteration space; reformulate the loop "
+            "(reversal/skewing) so retained distances are non-negative"
+        )
+
+    try:
+        isd = build_isd(prog, deps, prog.bounds, model=model, processors=processors)
+    except ValueError as e:  # pragma: no cover - guarded above for deps
+        raise WavefrontError(str(e)) from e
+
+    # Kahn layering: level(v) = 1 + max(level(pred)); cycle check for free.
+    nodes: List[Instance] = [
+        (s.name, it) for it in prog.iterations() for s in prog.statements
+    ]
+    indeg: Dict[Instance, int] = {v: 0 for v in nodes}
+    for u, succs in isd.adj.items():
+        for v, _tag in succs:
+            indeg[v] = indeg.get(v, 0) + 1
+
+    level: Dict[Instance, int] = {}
+    frontier = [v for v in nodes if indeg[v] == 0]
+    for v in frontier:
+        level[v] = 0
+    done = 0
+    while frontier:
+        nxt: List[Instance] = []
+        for u in frontier:
+            done += 1
+            for v, _tag in isd.successors(u):
+                level[v] = max(level.get(v, 0), level[u] + 1)
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    nxt.append(v)
+        frontier = nxt
+    if done != len(nodes):
+        stuck = [v for v in nodes if indeg[v] > 0][:4]
+        raise WavefrontError(
+            "enforced-order instance graph is cyclic — no wavefront "
+            f"layering exists (unschedulable instances include {stuck}); "
+            "check the retained dependences for a cyclic Δ-sign mix"
+        )
+
+    depth = max(level.values(), default=-1) + 1
+    lex = {name: k for k, name in enumerate(prog.names)}
+    by_level: List[Dict[str, List[Tuple[int, ...]]]] = [
+        {} for _ in range(depth)
+    ]
+    for it in prog.iterations():  # iteration order → sorted group members
+        for s in prog.statements:
+            by_level[level[(s.name, it)]].setdefault(s.name, []).append(it)
+    levels = tuple(
+        tuple(
+            WavefrontGroup(statement=name, iterations=tuple(its))
+            for name, its in sorted(groups.items(), key=lambda kv: lex[kv[0]])
+        )
+        for groups in by_level
+    )
+    return WavefrontSchedule(
+        program=prog, levels=levels, model=model, retained=tuple(deps)
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Vectorized execution
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class WavefrontStats:
+    levels: int
+    batched_ops: int
+    instances: int
+    max_width: int
+
+
+@dataclasses.dataclass
+class WavefrontReport:
+    store: dict
+    schedule: WavefrontSchedule
+    stats: WavefrontStats
+    matches_sequential: bool
+
+
+class _DenseStore:
+    """Dict-of-dicts memory image ⇄ dense float64 arrays with an origin.
+
+    A sparse input store (cells missing inside its bounding box) gets a
+    per-array coverage mask so that reading an absent cell raises KeyError —
+    matching what the sequential/threaded executors do on the same store —
+    instead of consuming uninitialized memory.  ``initial_store()`` produces
+    full rectangles, so the common path carries no mask and no overhead.
+    """
+
+    def __init__(self, store: Mapping[str, dict]) -> None:
+        self.origin: Dict[str, Tuple[int, ...]] = {}
+        self.data: Dict[str, np.ndarray] = {}
+        self.mask: Dict[str, np.ndarray] = {}  # only sparse arrays
+        for arr, cells in store.items():
+            keys = list(cells.keys())
+            ndim = len(keys[0])
+            lo = tuple(min(k[d] for k in keys) for d in range(ndim))
+            hi = tuple(max(k[d] for k in keys) for d in range(ndim))
+            shape = tuple(h - l + 1 for l, h in zip(lo, hi))
+            dense = np.zeros(shape, dtype=np.float64)
+            for k, v in cells.items():
+                dense[tuple(x - l for x, l in zip(k, lo))] = v
+            self.origin[arr] = lo
+            self.data[arr] = dense
+            if len(cells) != dense.size:
+                covered = np.zeros(shape, dtype=bool)
+                for k in keys:
+                    covered[tuple(x - l for x, l in zip(k, lo))] = True
+                self.mask[arr] = covered
+
+    def _index(self, arr: str, pts: np.ndarray) -> Tuple[np.ndarray, ...]:
+        lo = self.origin[arr]
+        idx = tuple(pts[:, d] - lo[d] for d in range(pts.shape[1]))
+        shape = self.data[arr].shape
+        for d, comp in enumerate(idx):
+            if comp.size and (comp.min() < 0 or comp.max() >= shape[d]):
+                raise KeyError(
+                    f"access to {arr!r} outside the initialized store "
+                    f"(dim {d}) — widen the pad of initial_store()"
+                )
+        return idx
+
+    def gather(self, arr: str, pts: np.ndarray) -> np.ndarray:
+        idx = self._index(arr, pts)
+        covered = self.mask.get(arr)
+        if covered is not None and not covered[idx].all():
+            raise KeyError(
+                f"read of uninitialized {arr!r} cell — the provided store "
+                "does not cover this access"
+            )
+        return self.data[arr][idx]
+
+    def scatter(self, arr: str, pts: np.ndarray, vals: np.ndarray) -> None:
+        idx = self._index(arr, pts)
+        self.data[arr][idx] = vals
+        covered = self.mask.get(arr)
+        if covered is not None:
+            covered[idx] = True
+
+    def to_dicts(self) -> dict:
+        out: dict = {}
+        for arr, dense in self.data.items():
+            lo = self.origin[arr]
+            covered = self.mask.get(arr)
+            cells: dict = {}
+            for flat, v in np.ndenumerate(dense):
+                if covered is not None and not covered[flat]:
+                    continue
+                cells[tuple(x + l for x, l in zip(flat, lo))] = float(v)
+            out[arr] = cells
+        return out
+
+
+def _batched_compute(stmt, reads: List[np.ndarray], width: int) -> np.ndarray:
+    """Evaluate ``stmt.compute`` over whole read vectors at once, falling
+    back to an elementwise loop for compute functions that don't broadcast."""
+
+    try:
+        vals = np.asarray(stmt.compute(*reads), dtype=np.float64)
+        if vals.shape == (width,):
+            return vals
+        if vals.ndim == 0:  # zero-read statements produce one scalar
+            return np.full(width, float(vals), dtype=np.float64)
+    except Exception:
+        pass
+    return np.array(
+        [
+            float(stmt.compute(*(r[j] for r in reads)))
+            for j in range(width)
+        ],
+        dtype=np.float64,
+    )
+
+
+def run_wavefront(
+    sync: SyncProgram,
+    *,
+    schedule: Optional[WavefrontSchedule] = None,
+    store: Optional[Mapping[str, dict]] = None,
+    compare: bool = True,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
+) -> WavefrontReport:
+    """Execute ``sync`` level by level, one vectorized op per group.
+
+    Mirrors :func:`repro.core.executor.run_threaded`: same store format,
+    same ``matches_sequential`` contract (bit-equal against the sequential
+    oracle).  An under-synchronized program mis-executes *deterministically*
+    here — the layering simply places a racing read before its producer —
+    which the differential tests exploit.
+    """
+
+    sched = schedule or schedule_wavefronts(
+        sync, model=model, processors=processors
+    )
+    prog = sync.program
+    init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
+    mem = _DenseStore(init)
+    data, origin = mem.data, mem.origin
+
+    # Per-statement lowering, hoisted out of the level loop, for both paths:
+    # store-relative scalar offsets (narrow groups) and absolute offset
+    # arrays (wide groups), so the hot loop is pure index arithmetic.
+    lowered = {}
+    for s in prog.statements:
+        rel = lambda ref: tuple(
+            o - l for o, l in zip(ref.offset_tuple(), origin[ref.array])
+        )
+        arr_off = lambda ref: np.asarray(ref.offset_tuple(), np.int64)
+        lowered[s.name] = (
+            s,
+            (s.write.array, rel(s.write), arr_off(s.write)),
+            tuple((r.array, rel(r), arr_off(r)) for r in s.reads),
+            (s.guard.array, rel(s.guard), arr_off(s.guard))
+            if s.guard is not None
+            else None,
+        )
+
+    masks = mem.mask
+
+    def scalar_cell(arr: str, it, off) -> np.float64:
+        idx = tuple(x + o for x, o in zip(it, off))
+        shape = data[arr].shape
+        for d, x in enumerate(idx):
+            if x < 0 or x >= shape[d]:
+                raise KeyError(
+                    f"access to {arr!r} outside the initialized store "
+                    f"(dim {d}) — widen the pad of initial_store()"
+                )
+        covered = masks.get(arr)
+        if covered is not None and not covered[idx]:
+            raise KeyError(
+                f"read of uninitialized {arr!r} cell — the provided store "
+                "does not cover this access"
+            )
+        return data[arr][idx]
+
+    for groups in sched.levels:
+        for g in groups:
+            stmt, (warr, woff, woff_np), reads_l, guard_l = lowered[g.statement]
+            width = len(g.iterations)
+            if width <= 4:
+                # narrow wavefront: scalar evaluation beats gather overhead
+                for it in g.iterations:
+                    if guard_l is not None and not (
+                        scalar_cell(guard_l[0], it, guard_l[1]) > 0
+                    ):
+                        continue
+                    vals = stmt.compute(
+                        *(scalar_cell(a, it, off) for a, off, _ in reads_l)
+                    )
+                    widx = tuple(x + o for x, o in zip(it, woff))
+                    wshape = data[warr].shape
+                    if any(
+                        x < 0 or x >= n for x, n in zip(widx, wshape)
+                    ):
+                        raise KeyError(
+                            f"write to {warr!r} outside the initialized "
+                            "store — widen the pad of initial_store()"
+                        )
+                    data[warr][widx] = vals
+                    covered = masks.get(warr)
+                    if covered is not None:
+                        covered[widx] = True
+                continue
+            pts = np.asarray(g.iterations, dtype=np.int64)
+            if guard_l is not None:
+                mask = mem.gather(guard_l[0], pts + guard_l[2]) > 0
+                pts = pts[mask]
+                if pts.shape[0] == 0:
+                    continue
+            reads = [
+                mem.gather(arr, pts + off_np) for arr, _, off_np in reads_l
+            ]
+            vals = _batched_compute(stmt, reads, pts.shape[0])
+            mem.scatter(warr, pts + woff_np, vals)
+
+    result = mem.to_dicts()
+    matches = True
+    if compare:
+        matches = run_sequential(prog, init) == result
+    return WavefrontReport(
+        store=result,
+        schedule=sched,
+        stats=WavefrontStats(
+            levels=sched.depth,
+            batched_ops=sched.batched_ops,
+            instances=sched.instances,
+            max_width=sched.max_width,
+        ),
+        matches_sequential=matches,
+    )

@@ -37,6 +37,7 @@ from typing import List
 from repro.core.dependence import ANTI, FLOW, Dependence
 from repro.core.elimination import eliminate_transitive
 from repro.core.ir import ArrayRef, LoopProgram, Statement
+from repro.core.wavefront import WavefrontSchedule, schedule_levels
 
 PROCESSORS = {"ISSUE": "mxu", "COMPUTE": "mxu", "LOAD": "dma"}
 
@@ -78,6 +79,10 @@ class KernelPipelinePlan:
     eliminated: tuple
     waits_per_step: int
     credit_wait_needed: bool
+    # dependence-level layering of the K-loop under the same retained deps —
+    # the steady-state overlap the Pallas pipeline realizes (LOAD of a later
+    # tile sharing a level with an earlier COMPUTE)
+    wavefront: WavefrontSchedule
 
     def summary(self) -> dict:
         return {
@@ -86,6 +91,8 @@ class KernelPipelinePlan:
             "eliminated": [d.pretty() for d in self.eliminated],
             "waits_per_step": self.waits_per_step,
             "credit_wait_needed": self.credit_wait_needed,
+            "wavefront_depth": self.wavefront.depth,
+            "overlapped_levels": overlapped_levels(self.wavefront),
         }
 
 
@@ -101,13 +108,37 @@ def plan_pipeline(depth: int = 2, steps: int = 16) -> KernelPipelinePlan:
         if PROCESSORS[d.source] != PROCESSORS[d.sink]
     ]
     credit = any(d.kind == ANTI for d in res.retained)
+    wf = schedule_levels(
+        prog, res.retained, model="procmap", processors=PROCESSORS
+    )
     return KernelPipelinePlan(
         depth=depth,
         retained=tuple(res.retained),
         eliminated=tuple(res.eliminated),
         waits_per_step=len(cross),
         credit_wait_needed=credit,
+        wavefront=wf,
     )
+
+
+def kloop_wavefronts(depth: int = 2, steps: int = 16) -> WavefrontSchedule:
+    """The K-loop's dependence-level layering (same retained deps as the
+    plan) — consumed by tests/benchmarks to check DMA/compute overlap."""
+
+    return plan_pipeline(depth, steps).wavefront
+
+
+def overlapped_levels(wf: WavefrontSchedule) -> int:
+    """Levels in which a tile LOAD shares a wavefront with a COMPUTE — the
+    mechanical signature of double buffering: with D ≥ 2 the layering puts
+    LOAD(i+1) beside COMPUTE(i), with D = 1 the credit wait serializes them."""
+
+    count = 0
+    for groups in wf.levels:
+        names = {g.statement for g in groups}
+        if "LOAD" in names and "COMPUTE" in names:
+            count += 1
+    return count
 
 
 def min_buffers(steps: int = 16, max_depth: int = 4) -> int:

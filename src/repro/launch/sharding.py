@@ -37,12 +37,19 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 
 def _pick(mesh: Mesh, dim: int, *candidates):
-    """First candidate mesh axis (or tuple) that divides ``dim``."""
+    """First candidate mesh axis (or tuple) that divides ``dim``.
+
+    A 1-tuple collapses to its bare axis name: newer jax no longer
+    normalizes ``P(("data",))`` to ``P("data")``, and the two compare
+    unequal even though they shard identically.
+    """
 
     for c in candidates:
         if c is None:
             continue
         if _fits(dim, _axis_size(mesh, c)):
+            if isinstance(c, tuple) and len(c) == 1:
+                return c[0]
             return c
     return None
 

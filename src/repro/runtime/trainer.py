@@ -57,6 +57,8 @@ def train_loop(
 ) -> TrainResult:
     """Run (or resume) training for ``total_steps`` optimizer steps."""
 
+    # warmup is fixed (not scaled to total_steps) so that a resumed run with
+    # a larger total_steps replays the identical LR schedule prefix
     opt = opt or AdamW(warmup_steps=10, total_steps=total_steps)
     step_fn = jax.jit(
         make_train_step(

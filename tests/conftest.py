@@ -1,0 +1,26 @@
+"""Shared pytest configuration.
+
+Registers the ``slow`` marker (belt-and-suspenders with pyproject.toml, so
+a bare ``pytest tests/`` from any rootdir still knows it).  Missing
+``hypothesis`` no longer errors at collection either: the property-based
+modules import through ``_hypothesis_compat``, which keeps their plain
+tests running and individually skips each ``@given`` test until the
+``test`` extra is installed (``pip install -e ".[test]"``).
+"""
+
+from _hypothesis_compat import HAVE_HYPOTHESIS
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (full CI job only)"
+    )
+
+
+def pytest_report_header(config):
+    if not HAVE_HYPOTHESIS:
+        return (
+            "hypothesis not installed — property-based (@given) tests "
+            "will be skipped"
+        )
+    return None

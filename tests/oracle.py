@@ -1,0 +1,103 @@
+"""Differential-testing harness: one entry point that runs a LoopProgram
+through every executor × synchronization variant and asserts bit-equality.
+
+The three executors (see ROADMAP "Execution backends"):
+
+  * ``run_sequential`` — the semantic oracle, always authoritative;
+  * ``run_threaded``   — the paper's machine (one thread per iteration,
+    send/wait only), authoritative for sync *sufficiency* under races;
+  * ``run_wavefront``  — the fast static-schedule backend, authoritative
+    for nothing by itself — which is exactly why every later PR's tests
+    route through this harness instead of trusting it.
+
+``assert_equivalent`` is the canonical check: for each elimination method it
+builds naive and optimized sync programs and demands that threaded and
+wavefront execution both reproduce the sequential store bit-for-bit from the
+same initial memory image.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core import (
+    LoopProgram,
+    parallelize,
+    run_sequential,
+    run_threaded,
+    run_wavefront,
+)
+
+METHODS = ("none", "isd", "pattern", "both")
+
+
+def run_all_backends(
+    prog: LoopProgram,
+    *,
+    methods: Sequence[str] = METHODS,
+    stalls: Optional[Mapping[Tuple[str, Tuple[int, ...]], float]] = None,
+    threaded: bool = True,
+    store: Optional[Mapping[str, dict]] = None,
+) -> Dict[str, dict]:
+    """Execute ``prog`` on every backend × method; return label → store.
+
+    Labels: ``sequential``, ``threaded/<method>/naive``,
+    ``threaded/<method>/optimized``, ``wavefront/<method>/naive``,
+    ``wavefront/<method>/optimized``.  All runs start from the same initial
+    memory image, so stores are comparable cell for cell.
+    """
+
+    init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
+    results: Dict[str, dict] = {
+        "sequential": run_sequential(prog, init),
+    }
+    for method in methods:
+        rep = parallelize(prog, method=method, backend="wavefront")
+        variants = {"naive": rep.naive_sync, "optimized": rep.optimized_sync}
+        for label, sync in variants.items():
+            if threaded:
+                t = run_threaded(sync, stalls=stalls, store=init, compare=False)
+                results[f"threaded/{method}/{label}"] = t.store
+            schedule = rep.wavefront if label == "optimized" else None
+            w = run_wavefront(sync, schedule=schedule, store=init, compare=False)
+            results[f"wavefront/{method}/{label}"] = w.store
+    return results
+
+
+def assert_equivalent(
+    prog: LoopProgram,
+    *,
+    methods: Sequence[str] = METHODS,
+    stalls: Optional[Mapping[Tuple[str, Tuple[int, ...]], float]] = None,
+    threaded: bool = True,
+) -> Dict[str, dict]:
+    """Assert every backend/variant reproduces the sequential store exactly.
+
+    Returns the result dict so callers can make further assertions (e.g. on
+    specific cells).  Failure messages name the first diverging backend and
+    cell, which is what you want from a differential harness at 2 a.m.
+    """
+
+    results = run_all_backends(
+        prog, methods=methods, stalls=stalls, threaded=threaded
+    )
+    expect = results["sequential"]
+    for label, store in results.items():
+        if label == "sequential":
+            continue
+        assert store == expect, (
+            f"{label} diverged from sequential execution: "
+            f"{_first_divergence(expect, store)}"
+        )
+    return results
+
+
+def _first_divergence(expect: dict, got: dict) -> str:
+    for arr in expect:
+        if arr not in got:
+            return f"array {arr!r} missing"
+        for idx, v in expect[arr].items():
+            g = got[arr].get(idx)
+            if g != v:
+                return f"{arr}{list(idx)}: expected {v!r}, got {g!r}"
+    return "stores have equal cells but unequal structure"

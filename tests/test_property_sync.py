@@ -10,7 +10,7 @@ draw so thread interleavings vary deterministically per example.
 """
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import (
     ArrayRef,

@@ -25,6 +25,8 @@ from repro.runtime.trainer import train_loop
 
 CFG = get_smoke_config("yi_6b")
 DC = DataConfig(global_batch=4, seq_len=16, seed=3)
+# convergence-check optimizer: warmup/LR sized to a ~10-step smoke run
+SMOKE_OPT = AdamW(learning_rate=1e-2, warmup_steps=2, total_steps=12)
 
 
 class TestDataPipeline:
@@ -149,7 +151,11 @@ class TestFaultTolerance:
 
 class TestTrainLoop:
     def test_loss_decreases(self):
-        res = train_loop(CFG, DC, total_steps=12)
+        # smoke-scale optimizer: the default production LR/warmup moves a
+        # 12-step run by less than the per-batch loss noise, which made this
+        # assertion a coin flip (the loop, not the hyperparameters, is
+        # under test — the stream's learnable marginal is what it learns)
+        res = train_loop(CFG, DC, total_steps=12, opt=SMOKE_OPT)
         assert res.final_step == 12
         assert np.mean(res.losses[-3:]) < np.mean(res.losses[:3])
 
@@ -240,7 +246,9 @@ class TestCompression:
             out, state["res"] = comp.apply(grads, state["res"])
             return out, opt_state
 
-        res = train_loop(CFG, DC, total_steps=10, grad_compressor=hook)
+        res = train_loop(
+            CFG, DC, total_steps=10, grad_compressor=hook, opt=SMOKE_OPT
+        )
         assert np.mean(res.losses[-3:]) < np.mean(res.losses[:3])
 
 

@@ -1,0 +1,182 @@
+"""Property tests for strip_dependences and merged sends (seeded-random
+programs; no hypothesis dependency, so this guard always runs).
+
+Central invariants after eliminating a dependence set:
+
+  * every surviving register still synchronizes ≥ 1 retained dependence and
+    still has exactly one send, placed at the register's source statement;
+  * every surviving wait corresponds to a retained dependence of its
+    register (matching sink, distance and array) — no orphaned waits;
+  * every retained dependence still has both halves of its pair;
+  * under merging, a register's send carries the union of its dependences'
+    arrays — the ``registers.get(r, (d,))`` vars path in core/sync.py.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    analyze,
+    eliminate_transitive,
+    insert_synchronization,
+    loop_carried,
+    strip_dependences,
+)
+
+ARRAYS = ["a", "b", "c", "d"]
+
+
+def random_program(seed: int) -> LoopProgram:
+    rng = random.Random(seed)
+    stmts = []
+    for k in range(rng.randint(1, 5)):
+        reads = tuple(
+            ArrayRef(rng.choice(ARRAYS), -rng.randint(0, 3))
+            for _ in range(rng.randint(0, 3))
+        )
+        stmts.append(Statement(f"S{k+1}", ArrayRef(rng.choice(ARRAYS), 0), reads))
+    return LoopProgram(
+        statements=tuple(stmts), bounds=((1, 1 + rng.randint(3, 7)),)
+    )
+
+
+def dep_key(d):
+    return (d.source, d.sink, d.array, d.distance, d.kind)
+
+
+SEEDS = list(range(40))
+
+
+class TestStripInvariants:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_surviving_registers_have_exactly_one_send(self, seed):
+        prog = random_program(seed)
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps)
+        res = eliminate_transitive(prog, deps)
+        stripped = strip_dependences(sync, res.eliminated)
+
+        send_count = {}
+        for name, sends in stripped.post_sends.items():
+            for s in sends:
+                send_count[s.reg] = send_count.get(s.reg, 0) + 1
+                # the send sits at the source statement of its register's deps
+                assert all(
+                    d.source == name for d in stripped.registers[s.reg]
+                )
+        for reg, ds in stripped.registers.items():
+            assert ds, f"register {reg} survived with no dependences"
+            assert send_count.get(reg) == 1
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_every_wait_has_a_retained_dependence(self, seed):
+        prog = random_program(seed)
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps)
+        res = eliminate_transitive(prog, deps)
+        stripped = strip_dependences(sync, res.eliminated)
+
+        retained = {dep_key(d) for d in res.retained}
+        for name, waits in stripped.pre_waits.items():
+            for w in waits:
+                matching = [
+                    d
+                    for d in stripped.registers[w.reg]
+                    if d.sink == name
+                    and d.distance == w.distance
+                    and d.array in w.vars
+                ]
+                assert matching, f"orphaned wait {w} at {name}"
+                assert all(dep_key(d) in retained for d in matching)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_every_retained_dep_keeps_its_pair(self, seed):
+        prog = random_program(seed)
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps)
+        res = eliminate_transitive(prog, deps)
+        stripped = strip_dependences(sync, res.eliminated)
+
+        for d in res.retained:
+            regs = [
+                r for r, ds in stripped.registers.items()
+                if dep_key(d) in {dep_key(x) for x in ds}
+            ]
+            assert len(regs) == 1
+            (reg,) = regs
+            assert any(s.reg == reg for s in stripped.post_sends[d.source])
+            assert any(
+                w.reg == reg and w.distance == d.distance
+                for w in stripped.pre_waits[d.sink]
+            )
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_no_eliminated_dep_survives_anywhere(self, seed):
+        prog = random_program(seed)
+        deps = analyze(prog)
+        sync = insert_synchronization(prog, deps)
+        res = eliminate_transitive(prog, deps)
+        stripped = strip_dependences(sync, res.eliminated)
+
+        gone = {dep_key(d) for d in res.eliminated}
+        live = {
+            dep_key(d) for ds in stripped.registers.values() for d in ds
+        }
+        assert not (gone & live)
+        # instruction counts never grow
+        assert (
+            stripped.sync_instruction_count()["total"]
+            <= sync.sync_instruction_count()["total"]
+        )
+
+
+class TestMergedSends:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_merged_send_vars_are_union_of_register_arrays(self, seed):
+        """The ``registers.get(r, (d,))`` path: a merged register's single
+        send must name every array its dependences synchronize."""
+
+        prog = random_program(seed)
+        deps = analyze(prog)
+        merged = insert_synchronization(prog, deps, merge=True)
+
+        for name, sends in merged.post_sends.items():
+            for s in sends:
+                ds = merged.registers[s.reg]
+                assert set(s.vars) == {d.array for d in ds}
+                assert all(d.source == name for d in ds)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_merge_one_register_per_source(self, seed):
+        prog = random_program(seed)
+        deps = analyze(prog)
+        merged = insert_synchronization(prog, deps, merge=True)
+
+        carried = loop_carried(deps)
+        sources = {d.source for d in carried}
+        assert len(merged.registers) == len(sources)
+        total_sends = sum(len(v) for v in merged.post_sends.values())
+        assert total_sends == len(sources)
+        # waits stay per-dependence: merging never drops a wait
+        unmerged = insert_synchronization(prog, deps, merge=False)
+        assert (
+            sum(len(v) for v in merged.pre_waits.values())
+            == sum(len(v) for v in unmerged.pre_waits.values())
+        )
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_merged_optimized_sync_still_correct(self, seed):
+        """End to end: merge + eliminate + strip still executes correctly
+        on the wavefront backend (differential vs sequential)."""
+
+        from repro.core import run_wavefront
+
+        prog = random_program(seed)
+        deps = analyze(prog)
+        res = eliminate_transitive(prog, deps)
+        merged_opt = insert_synchronization(prog, list(res.retained), merge=True)
+        assert run_wavefront(merged_opt).matches_sequential
