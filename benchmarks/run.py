@@ -1,5 +1,8 @@
 """Benchmark harness — one function per paper figure/example plus the
-framework-integration benches.  Prints ``name,us_per_call,derived`` CSV.
+framework-integration benches.  Prints ``name,us_per_call,derived`` CSV;
+``--json BENCH_sync.json`` additionally writes a machine-readable record
+``{name: {"us_per_call": float, "derived": str}}`` (uploaded as a CI
+artifact, the perf-trajectory data points).
 
 Paper benches (the paper's "results" are its didactic examples, so each
 bench reproduces one and reports the paper's implied metric — synchronization
@@ -18,20 +21,29 @@ Integration benches (the technique lifted into the distributed runtime):
   pp_schedule           stage-graph sync plans: naive vs reduced events
   kernel_pipeline       K-loop plan: buffer depth / credit-wait theorem
   grad_sync_batching    gradient-accumulation sync batching + compression
+
+Compile-cache benches (the repro.compile subsystem):
+
+  xla_vs_wavefront_alg6_1024  warm jitted XLA level loop vs NumPy wavefront
+  compile_cache_cold_warm     cold (analyze+lower+jit) vs warm (cache hit)
+  kloop_structural_cache      K-loop re-plans across steps: structural hits
 """
 
 from __future__ import annotations
 
 import importlib.util
+import json
 import pathlib
 import sys
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 import numpy as np
 
 if importlib.util.find_spec("repro") is None:  # run from a bare checkout
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+ROWS: List[Dict[str, object]] = []
 
 
 def _timeit(fn: Callable, n: int = 5) -> float:
@@ -42,7 +54,20 @@ def _timeit(fn: Callable, n: int = 5) -> float:
     return (time.perf_counter() - t0) / n * 1e6  # µs
 
 
+def _best_of(fn: Callable, n: int = 5) -> float:
+    """min-of-n per-call time in µs (steadier than the mean under CI load)."""
+
+    fn()  # warmup
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def _row(name: str, us: float, derived: str) -> None:
+    ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -200,6 +225,87 @@ def bench_wavefront_parallel_loop() -> None:
     )
 
 
+def bench_xla_vs_wavefront() -> None:
+    """Acceptance bench: the warm-cache jitted XLA level loop must beat the
+    NumPy wavefront interpreter on Alg. 6 @ 1024 iterations (same schedule,
+    same store format).  Measurements are *interleaved* min-of-7 so machine
+    load inflates both sides equally instead of flipping the ratio."""
+
+    from repro.compile import run_xla
+    from repro.core import parallelize, paper_alg6, run_wavefront
+
+    rep = parallelize(paper_alg6(1025), method="isd", backend="xla")
+    wrep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+    fn_xla = lambda: run_xla(rep.optimized_sync, compare=False)
+    fn_np = lambda: run_wavefront(
+        wrep.optimized_sync, schedule=wrep.wavefront, compare=False
+    )
+    fn_xla(), fn_np()  # warm both
+    t_xla = t_np = float("inf")
+    for _ in range(7):
+        t0 = time.perf_counter()
+        fn_xla()
+        t_xla = min(t_xla, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_np()
+        t_np = min(t_np, time.perf_counter() - t0)
+    t_xla *= 1e6
+    t_np *= 1e6
+    cc = rep.compiled.cache_stats()
+    _row(
+        "xla_vs_wavefront_alg6_1024",
+        t_xla,
+        f"wavefront_us={t_np:.0f} xla_us={t_xla:.0f} "
+        f"speedup={t_np / t_xla:.2f}x levels={wrep.wavefront.depth} "
+        f"cache_hits={cc['hits']} cache_misses={cc['misses']}",
+    )
+
+
+def bench_compile_cache_cold_warm() -> None:
+    """Cold (schedule + lowering + jit trace) vs warm (structural + table
+    hit) cost of the xla path, plus the counters after the sequence."""
+
+    from repro.compile import clear_compile_cache, compile_cache_stats, run_xla
+    from repro.core import parallelize, paper_alg6
+
+    clear_compile_cache()
+    rep = parallelize(paper_alg6(257), method="isd", backend="xla")
+    t0 = time.perf_counter()
+    run_xla(rep.optimized_sync, compare=False)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    warm_us = _best_of(
+        lambda: run_xla(rep.optimized_sync, compare=False), n=5
+    )
+    s = compile_cache_stats()
+    _row(
+        "compile_cache_cold_warm",
+        warm_us,
+        f"cold_us={cold_us:.0f} warm_us={warm_us:.0f} "
+        f"cold_over_warm={cold_us / warm_us:.1f}x "
+        f"hits={s['hits']} misses={s['misses']} "
+        f"table_hits={s['table_hits']} table_misses={s['table_misses']}",
+    )
+
+
+def bench_kloop_structural_cache() -> None:
+    """Re-planning the Pallas K-loop across different ``steps`` is a
+    structural hit (the key excludes bounds); changing the buffer depth
+    changes the retained deps and misses."""
+
+    from repro.kernels.pipelined_matmul.schedule import compile_kloop
+
+    compile_kloop(2, 16)  # may hit or miss depending on suite order
+    t_hit = _best_of(lambda: compile_kloop(2, 16), n=3)
+    _c, hit_other_steps = compile_kloop(2, 128)
+    _c, hit_other_depth = compile_kloop(1, 16)
+    _row(
+        "kloop_structural_cache",
+        t_hit,
+        f"steps_128_hit={hit_other_steps} depth_1_hit={hit_other_depth} "
+        "(key excludes bounds, includes retained deps)",
+    )
+
+
 def bench_executor_sync_ops() -> None:
     from repro.core import parallelize, paper_alg6, run_threaded
 
@@ -329,6 +435,9 @@ BENCHES = [
     bench_executor_sync_ops,
     bench_wavefront_speedup,
     bench_wavefront_parallel_loop,
+    bench_xla_vs_wavefront,
+    bench_compile_cache_cold_warm,
+    bench_kloop_structural_cache,
     bench_pp_schedule,
     bench_kernel_pipeline,
     bench_grad_sync_batching,
@@ -336,10 +445,31 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def main(argv: List[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="also write {name: {us_per_call, derived}} to PATH",
+    )
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
     for bench in BENCHES:
         bench()
+    if args.json:
+        record = {
+            str(r["name"]): {
+                "us_per_call": r["us_per_call"],
+                "derived": r["derived"],
+            }
+            for r in ROWS
+        }
+        pathlib.Path(args.json).write_text(json.dumps(record, indent=2))
+        print(f"wrote {len(record)} benches to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

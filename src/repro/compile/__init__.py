@@ -1,0 +1,109 @@
+"""``repro.compile`` — JAX/XLA compilation of optimized SyncPrograms.
+
+The fourth executor (see ROADMAP "Execution backends").  Where the wavefront
+backend (:mod:`repro.core.wavefront`) *interprets* the dependence-level
+schedule in NumPy, this package *compiles* it: the whole level loop becomes
+one jitted ``lax.fori_loop`` over padded, mask-guarded level buffers
+(:mod:`repro.compile.lowering`), cached structurally — by a canonical hash of
+(statement graph, retained dependences, execution model), never loop bounds
+(:mod:`repro.compile.structure`, :mod:`repro.compile.cache`) — so repeated
+requests with the same dependence structure skip re-analysis and re-jit
+entirely.
+
+Registered as ``parallelize(..., backend="xla")`` and differentially checked
+against the sequential oracle / threaded machine / NumPy wavefront by
+``tests/oracle.py`` on every program, like any other backend.
+
+Import is lazy: pulling this package costs no jax import until an artifact
+is actually built (``run_xla`` / ``get_or_compile``), which keeps the
+structural-hash helpers available to the parallelizer's analysis memo for
+free.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING
+
+from repro.compile.structure import (
+    compute_fingerprint,
+    program_fingerprint,
+    structural_key,
+)
+
+_LAZY = {
+    "CompileCache": "repro.compile.cache",
+    "GLOBAL_CACHE": "repro.compile.cache",
+    "clear_compile_cache": "repro.compile.cache",
+    "compile_cache_stats": "repro.compile.cache",
+    "get_or_compile": "repro.compile.cache",
+    "CompiledProgram": "repro.compile.lowering",
+    "XlaLoweringError": "repro.compile.lowering",
+    "XlaReport": "repro.compile.executor",
+    "run_xla": "repro.compile.executor",
+}
+
+if TYPE_CHECKING:  # pragma: no cover - typing aid only
+    from repro.compile.cache import (  # noqa: F401
+        CompileCache,
+        GLOBAL_CACHE,
+        clear_compile_cache,
+        compile_cache_stats,
+        get_or_compile,
+    )
+    from repro.compile.executor import XlaReport, run_xla  # noqa: F401
+    from repro.compile.lowering import (  # noqa: F401
+        CompiledProgram,
+        XlaLoweringError,
+    )
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+__all__ = sorted(
+    ["compute_fingerprint", "program_fingerprint", "structural_key", *_LAZY]
+)
+
+
+# ---------------------------------------------------------------------- #
+# Backend registration: parallelize(..., backend="xla").  The callables
+# defer jax-heavy imports until the backend is actually exercised.
+# ---------------------------------------------------------------------- #
+
+def _xla_prepare(optimized, retained):
+    from repro.compile.cache import get_or_compile
+
+    compiled, _hit = get_or_compile(
+        optimized.program, tuple(retained), model="doall"
+    )
+    return {"compiled": compiled}
+
+
+def _xla_differential(sync, *, store=None, stalls=None):
+    from repro.compile.executor import run_xla
+
+    return run_xla(sync, store=store, compare=False).store
+
+
+def _register() -> None:
+    from repro.core.parallelizer import BackendSpec, register_backend
+
+    register_backend(
+        BackendSpec(
+            name="xla",
+            prepare=_xla_prepare,
+            differential=_xla_differential,
+            description=(
+                "structurally cached jitted XLA level loop "
+                "(repro.compile; one artifact per dependence structure)"
+            ),
+        )
+    )
+
+
+_register()

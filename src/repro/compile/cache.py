@@ -1,0 +1,149 @@
+"""Structural compile cache: one artifact per dependence structure.
+
+Keyed by :func:`repro.compile.structure.structural_key` — a canonical hash of
+(statement graph, retained dependences, execution model), *not* loop bounds —
+so the serving path re-planning the same decode loop every batch wave and the
+Pallas K-loop plan re-lowering the same ISSUE/LOAD/COMPUTE loop for different
+``steps`` all resolve to the same :class:`~repro.compile.lowering.CompiledProgram`.
+Below the structural level, each artifact memoizes its per-(bounds, store
+layout) level tables, and jax's jit cache memoizes per-shape XLA
+specializations; a warm request touches none of the analysis, scheduling or
+tracing machinery.
+
+Hit/miss counters (structural and table level) are surfaced through
+``ParallelizationReport.summary()`` and the ``compile_cache_*`` benchmarks.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.dependence import Dependence
+from repro.core.ir import LoopProgram
+from repro.compile.structure import structural_key
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    table_hits: int = 0
+    table_misses: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def note(self, hit: bool) -> None:
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+
+    def note_tables(self, hit: bool) -> None:
+        if hit:
+            self.table_hits += 1
+        else:
+            self.table_misses += 1
+
+
+class CompileCache:
+    """Thread-safe structural LRU cache of compiled sync-program executables.
+
+    Bounded like the per-artifact table cache (CompiledProgram.MAX_CASES):
+    a long-running server whose request *structures* vary (e.g. per-tenant
+    compute functions) must not pin jitted executables for structures that
+    never recur.
+    """
+
+    MAX_ENTRIES = 128
+
+    def __init__(self) -> None:
+        self._entries: "collections.OrderedDict[str, CompiledProgram]" = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys(self) -> Tuple[str, ...]:
+        return tuple(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.stats = CacheStats()
+
+    def note_tables(self, hit: bool) -> None:
+        """Thread-safe table-level counter update (the second cache level
+        lives inside each CompiledProgram; its hits are recorded here)."""
+
+        with self._lock:
+            self.stats.note_tables(hit)
+
+    def get_or_compile(
+        self,
+        program: LoopProgram,
+        retained: Sequence[Dependence],
+        *,
+        model: str = "doall",
+        processors: Optional[Dict[str, object]] = None,
+    ) -> Tuple["CompiledProgram", bool]:
+        """Resolve (or build) the artifact for this structure.
+
+        Returns ``(compiled, hit)``.  The build happens *outside* the lock
+        (the first one pays the jax import, seconds — holding the lock
+        would stall concurrent hits on other keys); a lost build race
+        re-checks on insert and reuses the winner.
+        """
+
+        from repro.compile.lowering import CompiledProgram
+
+        key = structural_key(program, retained, model, processors)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.stats.note(True)
+                return entry, True
+        built = CompiledProgram(
+            key, program, retained, model=model, processors=processors
+        )
+        built.cache = self
+        with self._lock:
+            entry = self._entries.get(key)  # lost a build race: use theirs
+            if entry is None:
+                self._entries[key] = entry = built
+                while len(self._entries) > self.MAX_ENTRIES:
+                    self._entries.popitem(last=False)
+            self.stats.note(False)
+            return entry, False
+
+
+GLOBAL_CACHE = CompileCache()
+
+
+def get_or_compile(
+    program: LoopProgram,
+    retained: Sequence[Dependence],
+    *,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
+) -> Tuple["CompiledProgram", bool]:
+    """Module-level convenience over the process-global cache."""
+
+    return GLOBAL_CACHE.get_or_compile(
+        program, retained, model=model, processors=processors
+    )
+
+
+def compile_cache_stats() -> Dict[str, int]:
+    return GLOBAL_CACHE.stats.as_dict()
+
+
+def clear_compile_cache() -> None:
+    GLOBAL_CACHE.clear()

@@ -1,0 +1,94 @@
+"""``run_xla`` — the compiled-executor entry point, API-parallel to
+:func:`repro.core.wavefront.run_wavefront` and
+:func:`repro.core.executor.run_threaded` so the differential harness
+(``tests/oracle.py``) can drive all registered backends uniformly.
+
+Resolution path per call: structural cache (artifact) → per-bounds table
+cache (level buffers) → jax jit cache (XLA specialization) → execute.  A
+fully warm call touches only the last step plus host/device store conversion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+from repro.core.ir import run_sequential
+from repro.core.sync import SyncProgram
+from repro.core.wavefront import (
+    WavefrontSchedule,
+    WavefrontStats,
+    _DenseStore,
+    _sync_dependences,
+)
+from repro.compile.cache import GLOBAL_CACHE, CompileCache
+
+
+@dataclasses.dataclass
+class XlaReport:
+    """Mirror of :class:`~repro.core.wavefront.WavefrontReport` plus the
+    compile-cache provenance of this call."""
+
+    store: dict
+    schedule: WavefrontSchedule
+    stats: WavefrontStats
+    matches_sequential: bool
+    compiled: object  # CompiledProgram
+    cache_events: Dict[str, str]  # {"structural": hit|miss, "tables": ...}
+
+
+def run_xla(
+    sync: SyncProgram,
+    *,
+    schedule: Optional[WavefrontSchedule] = None,
+    store: Optional[Mapping[str, dict]] = None,
+    compare: bool = True,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
+    cache: Optional[CompileCache] = None,
+) -> XlaReport:
+    """Execute ``sync`` through the structural compile cache.
+
+    Same store format and ``matches_sequential`` contract as the other
+    executors.  ``schedule`` (when given, e.g. from a wavefront-backend
+    report) contributes its retained dependence set *and* its execution
+    model — the artifact still builds its own level tables per bounds,
+    because one structural entry serves many bounds, but it must layer them
+    under the schedule's model (a procmap schedule re-layered as doall would
+    silently drop same-processor orders).
+    """
+
+    cache = cache if cache is not None else GLOBAL_CACHE
+    prog = sync.program
+    if schedule is not None:
+        retained = tuple(schedule.retained)
+        model = schedule.model
+        if processors is None:
+            processors = schedule.processors
+    else:
+        retained = tuple(_sync_dependences(sync))
+    compiled, hit = cache.get_or_compile(
+        prog, retained, model=model, processors=processors
+    )
+
+    init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
+    dense = _DenseStore(init)
+    case, table_hit = compiled.prepare(prog, dense)
+    cache.note_tables(table_hit)
+    stats = compiled.execute(case, dense)
+    result = dense.to_dicts()
+
+    matches = True
+    if compare:
+        matches = run_sequential(prog, init) == result
+    return XlaReport(
+        store=result,
+        schedule=case.schedule,
+        stats=stats,
+        matches_sequential=matches,
+        compiled=compiled,
+        cache_events={
+            "structural": "hit" if hit else "miss",
+            "tables": "hit" if table_hit else "miss",
+        },
+    )

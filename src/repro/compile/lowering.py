@@ -1,0 +1,713 @@
+"""JAX/XLA lowering of a wavefront schedule to one jitted executable.
+
+The NumPy wavefront backend (:mod:`repro.core.wavefront`) interprets the
+level schedule: a Python loop over ~2·N levels, each doing a small gather /
+compute / scatter.  For the deep, narrow schedules the paper's loops produce
+(Alg. 6 at 1024 iterations has 2047 levels of width ≤ 2 after the batched
+level 0) the Python-level dispatch dominates.  This module compiles the whole
+level loop into a single XLA computation instead:
+
+  * every array of the memory image becomes one flat ``float64`` buffer with
+    a *trash cell* appended past the live data — masked-out lanes scatter
+    there, so padding never corrupts the store;
+  * each statement's wavefront groups are packed level-sorted into padded
+    index tables of shape ``(G, W)`` (``G`` groups padded with a sentinel
+    row, ``W`` lanes padded with redirected indices) — per-statement widths,
+    so a 1024-wide DOALL statement does not inflate a width-1 chain;
+  * the executable is a ``lax.fori_loop`` over levels whose body keeps one
+    cursor per statement: when the cursor's next group belongs to the
+    current level, a ``lax.cond`` runs that group's vectorized
+    gather/compute/scatter and advances the cursor.  Per level, only the
+    statements that actually have work pay for it.
+
+Because the tables are *data* and the group/lane axes are padded to
+power-of-two buckets, one traced artifact serves any iteration count whose
+bucketed shapes coincide; jax's own jit cache handles per-shape
+specialization below the structural cache (:mod:`repro.compile.cache`).
+
+Everything runs in ``float64`` (via :func:`jax.experimental.enable_x64`), so
+stores are bit-equal to :func:`repro.core.ir.run_sequential` — the same
+contract the other executors are held to by ``tests/oracle.py``.
+
+Error parity with the NumPy backend: an access outside the initialized store
+raises ``KeyError("… outside the initialized store …")`` (statically for
+unguarded statements, via an in-loop flag for guard-dependent ones), and a
+read of an uninitialized cell of a sparse store raises
+``KeyError("… uninitialized …")`` (tracked at run time with per-array
+coverage buffers, since an earlier level may legitimately initialize a cell a
+later level reads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dependence import Dependence
+from repro.core.ir import LoopProgram
+from repro.core.wavefront import (
+    WavefrontSchedule,
+    WavefrontStats,
+    _DenseStore,
+    schedule_levels,
+)
+
+
+class XlaLoweringError(ValueError):
+    """The program cannot be lowered to XLA (e.g. untraceable compute fn)."""
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# ---------------------------------------------------------------------- #
+# Strict lane arithmetic.  XLA's CPU emitter compiles the whole computation
+# into one LLVM function with aggressive FP op fusion, so a multiply feeding
+# an add is contracted into an FMA — a 1-ulp divergence from the scalar
+# interpreters that appears and disappears with fusion context, and that
+# neither ``lax.optimization_barrier`` nor the documented fast-math flags
+# suppress (the contraction happens below HLO, in instruction selection).
+#
+# The compute functions are therefore evaluated on proxies that *launder*
+# every arithmetic result through an integer ``xor`` with a runtime-opaque
+# zero (a scalar argument of the jitted executable, so neither XLA's
+# algebraic simplifier nor LLVM's InstCombine can fold it away).  The
+# laundering is bit-exact — including -0.0 and NaN — and severs every
+# producer→consumer float pattern, forcing each IEEE op to round
+# individually exactly like the sequential oracle.  Cost: two bitcasts and
+# an integer xor per op per lane, on expressions a handful of ops long.
+# ---------------------------------------------------------------------- #
+
+class _StrictLane:
+    """Operator-intercepting wrapper around a lane vector.
+
+    ``z`` is the runtime-opaque int64 zero used to launder results.
+    """
+
+    __slots__ = ("x", "z")
+
+    def __init__(self, x, z) -> None:
+        self.x = x
+        self.z = z
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"_StrictLane({self.x!r})"
+
+    def __bool__(self) -> bool:
+        # `if lane:` would silently take one branch for every lane; raising
+        # routes value-branching computes into the vmap fallback, where jax
+        # gives the same treatment (trace error → XlaLoweringError)
+        raise TypeError(
+            "compute fn branches on a lane vector's truth value; "
+            "per-lane branching is not vectorizable — use arithmetic "
+            "selects or run backend='wavefront'"
+        )
+
+
+def _unwrap(v):
+    return v.x if isinstance(v, _StrictLane) else v
+
+
+def _protect(x, z):
+    import jax.numpy as jnp
+    from jax import lax
+
+    x = jnp.asarray(x)
+    if x.dtype != jnp.float64:  # int/bool intermediates are already exact
+        return x
+    bits = lax.bitcast_convert_type(x, jnp.int64)
+    return lax.bitcast_convert_type(jnp.bitwise_xor(bits, z), jnp.float64)
+
+
+def _launder_operand(v, z):
+    """Make an operand runtime-opaque (python scalars become laundered f64
+    constants).  Used for division-family ops: XLA rewrites division by a
+    *compile-time* constant into a reciprocal multiply, which is not
+    correctly rounded (e.g. ``x / 3`` differs from IEEE by 1 ulp for some
+    x); a laundered divisor forces a true hardware ``fdiv``."""
+
+    import jax.numpy as jnp
+
+    if isinstance(v, (int, float)):
+        v = jnp.asarray(float(v), jnp.float64)
+    return _protect(v, z)
+
+
+def _strict_binop(op, swap: bool, launder_operands: bool = False):
+    def method(self, other):
+        a, b = _unwrap(self), _unwrap(other)
+        if launder_operands:
+            a, b = _launder_operand(a, self.z), _launder_operand(b, self.z)
+        if swap:
+            a, b = b, a
+        return _StrictLane(_protect(op(a, b), self.z), self.z)
+
+    return method
+
+
+def _strict_unop(op):
+    def method(self):
+        return _StrictLane(_protect(op(self.x), self.z), self.z)
+
+    return method
+
+
+def _install_strict_ops() -> None:
+    import operator
+
+    for name, op, launder in [
+        ("add", operator.add, False),
+        ("sub", operator.sub, False),
+        ("mul", operator.mul, False),
+        ("truediv", operator.truediv, True),
+        ("floordiv", operator.floordiv, True),
+        ("mod", operator.mod, True),
+        ("pow", operator.pow, True),
+    ]:
+        setattr(
+            _StrictLane, f"__{name}__", _strict_binop(op, False, launder)
+        )
+        setattr(
+            _StrictLane, f"__r{name}__", _strict_binop(op, True, launder)
+        )
+    for name, op in [
+        ("neg", operator.neg),
+        ("pos", operator.pos),
+        ("abs", operator.abs),
+    ]:
+        setattr(_StrictLane, f"__{name}__", _strict_unop(op))
+    for name, op in [
+        ("lt", operator.lt),
+        ("le", operator.le),
+        ("gt", operator.gt),
+        ("ge", operator.ge),
+        ("eq", operator.eq),  # value comparison, NOT python identity —
+        ("ne", operator.ne),  # default object.__eq__ would be silently wrong
+    ]:
+        # comparisons exit the strict domain (no rounding to protect)
+        setattr(
+            _StrictLane,
+            f"__{name}__",
+            lambda self, other, op=op: op(_unwrap(self), _unwrap(other)),
+        )
+
+
+_STRICT_READY = False
+
+
+def _ensure_strict_ops() -> None:
+    global _STRICT_READY
+    if not _STRICT_READY:
+        _install_strict_ops()
+        _STRICT_READY = True
+
+
+# ---------------------------------------------------------------------- #
+# Trace-shaping statics: everything (beyond argument shapes) that changes
+# the structure of the traced computation.  Hashable by value, so prepared
+# cases with identical statics and bucketed shapes share one jit trace.
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class _StmtStatic:
+    name: str
+    write: str
+    reads: Tuple[str, ...]
+    guard: Optional[str]
+    has_oob: bool                  # tables carry an "oob" lane mask to flag
+    cov_reads: Tuple[bool, ...]    # per read: consult the coverage buffer
+    cov_guard: bool
+    cov_write: bool                # scatter updates the coverage buffer
+    # narrow statements run every level with the active bit folded into the
+    # lane mask (a handful of trash-redirected lanes) — cheaper than a
+    # lax.cond, whose pass-through copies the write array at every level;
+    # wide statements keep the cond so inactive levels don't pay their lanes
+    use_cond: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class _CaseStatic:
+    stmts: Tuple[_StmtStatic, ...]
+
+
+@dataclasses.dataclass
+class PreparedCase:
+    """Per-(bounds, store layout) lowering artifacts: level tables + layout."""
+
+    static: _CaseStatic
+    n_levels: int
+    tables: Tuple[Dict[str, np.ndarray], ...]   # per statement
+    arrays: Tuple[str, ...]
+    origin: Dict[str, Tuple[int, ...]]
+    shapes: Dict[str, Tuple[int, ...]]
+    flat_sizes: Dict[str, int]                  # live cells per array
+    padded_sizes: Dict[str, int]                # flat buffer length (≥ live+1)
+    sparse: Tuple[str, ...]                     # arrays carrying coverage
+    schedule: WavefrontSchedule
+    _device_tables: Optional[Tuple] = None      # jnp copies, converted once
+
+
+_OOB_MSG = (
+    "access outside the initialized store — widen the pad of initial_store()"
+)
+_HOLE_MSG = (
+    "read of an uninitialized cell — the provided store does not cover "
+    "this access"
+)
+
+
+class CompiledProgram:
+    """One structural cache entry: a lowering plan plus its jit executable.
+
+    Built once per (statement graph, retained dependences, execution model);
+    per-bounds level tables and per-shape XLA specializations are nested
+    caches inside.  ``parallelize(..., backend="xla")`` attaches the handle
+    to the :class:`~repro.core.parallelizer.ParallelizationReport`.
+    """
+
+    # prepared-case LRU bound: a long-running server whose bounds vary per
+    # request must not accumulate level tables without limit
+    MAX_CASES = 32
+
+    def __init__(
+        self,
+        key: str,
+        program: LoopProgram,
+        retained: Sequence[Dependence],
+        model: str = "doall",
+        processors: Optional[Dict[str, object]] = None,
+    ) -> None:
+        import collections
+        import threading
+
+        import jax
+
+        self.key = key
+        self.program = program
+        self.retained = tuple(retained)
+        self.model = model
+        self.processors = dict(processors) if processors else None
+        self.cache = None  # back-reference set by the owning CompileCache
+        self._cases: "collections.OrderedDict[Tuple, PreparedCase]" = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.Lock()
+        self._batched = [
+            self._make_batched(s) for s in program.statements
+        ]
+        self._jit = jax.jit(self._exec, static_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def prepared_cases(self) -> int:
+        return len(self._cases)
+
+    def cache_stats(self) -> Dict[str, int]:
+        if self.cache is None:  # pragma: no cover - standalone use
+            return {}
+        return self.cache.stats.as_dict()
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _make_batched(stmt):
+        """Vectorized compute over whole lane vectors.
+
+        Reads are wrapped in :class:`_StrictLane` so every arithmetic op
+        rounds individually (bit-identical to the scalar interpreters);
+        compute functions that don't speak the proxy protocol (e.g. calling
+        ``jnp.*`` directly) fall back to a plain ``jax.vmap`` — traceable
+        but subject to XLA's usual elementwise codegen."""
+
+        import jax
+        import jax.numpy as jnp
+
+        _ensure_strict_ops()
+        n_reads = len(stmt.reads)
+
+        def batched(reads: List, width: int, opaque_zero):
+            if n_reads == 0:
+                return jnp.broadcast_to(
+                    jnp.asarray(stmt.compute(), jnp.float64), (width,)
+                )
+            try:
+                out = jnp.asarray(
+                    _unwrap(
+                        stmt.compute(
+                            *(_StrictLane(r, opaque_zero) for r in reads)
+                        )
+                    ),
+                    jnp.float64,
+                )
+                if out.shape == (width,):
+                    return out
+                if out.ndim == 0:
+                    return jnp.broadcast_to(out, (width,))
+            except Exception:
+                pass
+            try:
+                return jnp.asarray(jax.vmap(stmt.compute)(*reads), jnp.float64)
+            except Exception as e:
+                raise XlaLoweringError(
+                    f"compute function of {stmt.name!r} is not traceable by "
+                    f"jax ({e!r}); run this program with backend='wavefront' "
+                    "or make the compute fn jnp-compatible"
+                ) from e
+
+        return batched
+
+    # ------------------------------------------------------------------ #
+    # Table construction (host side, NumPy)
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def _layout_key(dense: _DenseStore) -> Tuple:
+        return tuple(
+            sorted(
+                (a, dense.origin[a], dense.data[a].shape, a in dense.mask)
+                for a in dense.data
+            )
+        )
+
+    def prepare(
+        self, program: LoopProgram, dense: _DenseStore
+    ) -> Tuple[PreparedCase, bool]:
+        """Level tables for these bounds + this store layout (memoized in a
+        bounded LRU; thread-safe for concurrent serving)."""
+
+        key = (program.bounds, self._layout_key(dense))
+        with self._lock:
+            case = self._cases.get(key)
+            if case is not None:
+                self._cases.move_to_end(key)
+                return case, True
+        built = self._build_case(program, dense)
+        with self._lock:
+            case = self._cases.get(key)  # lost a build race: reuse theirs
+            if case is None:
+                self._cases[key] = case = built
+                while len(self._cases) > self.MAX_CASES:
+                    self._cases.popitem(last=False)
+        return case, False
+
+    def _build_case(
+        self, program: LoopProgram, dense: _DenseStore
+    ) -> PreparedCase:
+        missing = [a for a in program.arrays() if a not in dense.data]
+        if missing:
+            raise KeyError(
+                f"store is missing arrays {missing} referenced by the program"
+            )
+        sched = schedule_levels(
+            program,
+            list(self.retained),
+            model=self.model,
+            processors=self.processors,
+        )
+        n_levels = sched.depth
+        arrays = tuple(sorted(dense.data))
+        origin = {a: dense.origin[a] for a in arrays}
+        shapes = {a: dense.data[a].shape for a in arrays}
+        flat_sizes = {a: int(np.prod(shapes[a])) for a in arrays}
+        padded_sizes = {a: _next_pow2(flat_sizes[a] + 1) for a in arrays}
+        sparse = tuple(a for a in arrays if a in dense.mask)
+
+        per_stmt: Dict[str, List[Tuple[int, np.ndarray]]] = {}
+        for lvl, groups in enumerate(sched.levels):
+            for g in groups:
+                per_stmt.setdefault(g.statement, []).append(
+                    (lvl, np.asarray(g.iterations, dtype=np.int64))
+                )
+
+        stmt_statics: List[_StmtStatic] = []
+        tables: List[Dict[str, np.ndarray]] = []
+        for s in program.statements:
+            entries = per_stmt.get(s.name, [])
+            G = len(entries)
+            W = max((pts.shape[0] for _, pts in entries), default=1)
+            Gp, Wp = _next_pow2(G + 1), _next_pow2(W)
+
+            glevel = np.full(Gp, n_levels, dtype=np.int32)  # sentinel rows
+            lanemask = np.zeros((Gp, Wp), dtype=bool)
+            accesses = (
+                [("write", s.write)]
+                + [(f"read{j}", r) for j, r in enumerate(s.reads)]
+                + ([("guard", s.guard)] if s.guard is not None else [])
+            )
+            idx = {
+                role: np.zeros((Gp, Wp), dtype=np.int32)
+                for role, _ in accesses
+            }
+            oob = np.zeros((Gp, Wp), dtype=bool)
+            guard_oob = np.zeros((Gp, Wp), dtype=bool)
+
+            for gi, (lvl, pts) in enumerate(entries):
+                glevel[gi] = lvl
+                w = pts.shape[0]
+                lanemask[gi, :w] = True
+                if Wp > w:  # pad lanes repeat the first point (masked out)
+                    pts = np.concatenate(
+                        [pts, np.repeat(pts[:1], Wp - w, axis=0)]
+                    )
+                for role, ref in accesses:
+                    a = ref.array
+                    coords = (
+                        pts
+                        + np.asarray(ref.offset_tuple(), np.int64)
+                        - np.asarray(origin[a], np.int64)
+                    )
+                    shp = np.asarray(shapes[a], np.int64)
+                    inb = np.all((coords >= 0) & (coords < shp), axis=1)
+                    flat = np.ravel_multi_index(
+                        tuple(
+                            np.clip(coords[:, d], 0, shapes[a][d] - 1)
+                            for d in range(coords.shape[1])
+                        ),
+                        shapes[a],
+                    )
+                    # out-of-box lanes are redirected to the trash cell
+                    flat = np.where(inb, flat, padded_sizes[a] - 1)
+                    idx[role][gi] = flat.astype(np.int32)
+                    bad = ~inb[:w]
+                    if role == "guard":
+                        guard_oob[gi, :w] |= bad
+                    else:
+                        oob[gi, :w] |= bad
+
+            oob &= lanemask
+            guard_oob &= lanemask
+            # The guard access itself is evaluated unconditionally by the
+            # sequential oracle, so a guard read outside the store is a
+            # static error even for guarded statements.
+            if guard_oob.any():
+                raise KeyError(f"{s.name}: guard {_OOB_MSG}")
+            if s.guard is None and oob.any():
+                raise KeyError(f"{s.name}: {_OOB_MSG}")
+            has_oob = bool(s.guard is not None and oob.any())
+
+            cov_reads = tuple(r.array in dense.mask for r in s.reads)
+            cov_guard = bool(
+                s.guard is not None and s.guard.array in dense.mask
+            )
+            cov_write = s.write.array in dense.mask
+
+            stmt_statics.append(
+                _StmtStatic(
+                    name=s.name,
+                    write=s.write.array,
+                    reads=tuple(r.array for r in s.reads),
+                    guard=s.guard.array if s.guard is not None else None,
+                    has_oob=has_oob,
+                    cov_reads=cov_reads,
+                    cov_guard=cov_guard,
+                    cov_write=cov_write,
+                    use_cond=Wp > 32,
+                )
+            )
+            table = {
+                "glevel": glevel,
+                "lanemask": lanemask,
+                "widx": idx["write"],
+            }
+            table["ridx"] = tuple(
+                idx[f"read{j}"] for j in range(len(s.reads))
+            )
+            if s.guard is not None:
+                table["gidx"] = idx["guard"]
+            if has_oob:
+                table["oob"] = oob
+            tables.append(table)
+
+        return PreparedCase(
+            static=_CaseStatic(stmts=tuple(stmt_statics)),
+            n_levels=n_levels,
+            tables=tuple(tables),
+            arrays=arrays,
+            origin=origin,
+            shapes=shapes,
+            flat_sizes=flat_sizes,
+            padded_sizes=padded_sizes,
+            sparse=sparse,
+            schedule=sched,
+        )
+
+    # ------------------------------------------------------------------ #
+    # The traced executable
+    # ------------------------------------------------------------------ #
+
+    def _exec(
+        self, static: _CaseStatic, n_levels, tables, store, coverage, bad,
+        opaque_zero,
+    ):
+        import jax.numpy as jnp
+        from jax import lax
+
+        K = len(static.stmts)
+
+        def body(level, carry):
+            store, coverage, cursors, bad = carry
+            for k, ss in enumerate(static.stmts):
+                t = tables[k]
+                c = cursors[k]
+                active = (
+                    lax.dynamic_index_in_dim(
+                        t["glevel"], c, axis=0, keepdims=False
+                    )
+                    == level
+                )
+
+                # The cond returns only what the group writes (one array,
+                # optionally its coverage, the flags) — routing the whole
+                # store through it would force XLA to copy every array at
+                # every level; read-only arrays are captured by closure.
+                def run_group(gate=None, t=t, k=k, ss=ss, c=c, bad=bad):
+                    def row(m):
+                        return lax.dynamic_index_in_dim(
+                            m, c, axis=0, keepdims=False
+                        )
+
+                    lanes = row(t["lanemask"])
+                    if gate is not None:  # condless path: fold the active
+                        lanes = lanes & gate  # bit into the lane mask
+                    ridx = [row(ix) for ix in t["ridx"]]
+                    mask = lanes
+                    if ss.guard is not None:
+                        gix = row(t["gidx"])
+                        if ss.cov_guard:
+                            bad = bad.at[1].set(
+                                bad[1]
+                                | jnp.any(lanes & ~coverage[ss.guard][gix])
+                            )
+                        mask = mask & (store[ss.guard][gix] > 0.0)
+                    for j, (a, ix) in enumerate(zip(ss.reads, ridx)):
+                        if ss.cov_reads[j]:
+                            bad = bad.at[1].set(
+                                bad[1] | jnp.any(mask & ~coverage[a][ix])
+                            )
+                    if ss.has_oob:
+                        oob_row = row(t["oob"])
+                        bad = bad.at[0].set(bad[0] | jnp.any(mask & oob_row))
+                        mask = mask & ~oob_row
+                    reads = [store[a][ix] for a, ix in zip(ss.reads, ridx)]
+                    vals = self._batched[k](reads, lanes.shape[0], opaque_zero)
+                    trash = store[ss.write].shape[0] - 1
+                    tgt = jnp.where(mask, row(t["widx"]), trash)
+                    new_write = store[ss.write].at[tgt].set(vals)
+                    new_cov = (
+                        coverage[ss.write].at[tgt].set(True)
+                        if ss.cov_write
+                        else ()
+                    )
+                    return (new_write, new_cov, bad)
+
+                def skip_group(ss=ss, bad=bad):
+                    return (
+                        store[ss.write],
+                        coverage[ss.write] if ss.cov_write else (),
+                        bad,
+                    )
+
+                if ss.use_cond:
+                    new_write, new_cov, bad = lax.cond(
+                        active, run_group, skip_group
+                    )
+                else:
+                    new_write, new_cov, bad = run_group(gate=active)
+                store = dict(store)
+                store[ss.write] = new_write
+                if ss.cov_write:
+                    coverage = dict(coverage)
+                    coverage[ss.write] = new_cov
+                cursors = cursors.at[k].add(active.astype(jnp.int32))
+            return (store, coverage, cursors, bad)
+
+        store, coverage, _, bad = lax.fori_loop(
+            0,
+            n_levels,
+            body,
+            (store, coverage, jnp.zeros((K,), jnp.int32), bad),
+        )
+        return store, coverage, bad
+
+    # ------------------------------------------------------------------ #
+    # Host-side execution wrapper
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def _to_device(case: PreparedCase) -> Tuple:
+        import jax.numpy as jnp
+
+        return tuple(
+            {
+                k: (
+                    tuple(jnp.asarray(x) for x in v)
+                    if isinstance(v, tuple)
+                    else jnp.asarray(v)
+                )
+                for k, v in t.items()
+            }
+            for t in case.tables
+        )
+
+    def execute(self, case: PreparedCase, dense: _DenseStore) -> WavefrontStats:
+        """Run the artifact on ``dense`` (mutated in place with the result)."""
+
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            if case._device_tables is None:
+                # conversion is idempotent, so a concurrent duplicate would
+                # cost only a wasted copy; the lock keeps assignment clean
+                with self._lock:
+                    if case._device_tables is None:
+                        case._device_tables = self._to_device(case)
+            store = {}
+            for a in case.arrays:
+                flat = np.zeros(case.padded_sizes[a], dtype=np.float64)
+                flat[: case.flat_sizes[a]] = dense.data[a].ravel()
+                store[a] = jnp.asarray(flat)
+            coverage = {}
+            for a in case.sparse:
+                cov = np.zeros(case.padded_sizes[a], dtype=bool)
+                cov[: case.flat_sizes[a]] = dense.mask[a].ravel()
+                coverage[a] = jnp.asarray(cov)
+            out_store, out_cov, bad = self._jit(
+                case.static,
+                case.n_levels,
+                case._device_tables,
+                store,
+                coverage,
+                jnp.zeros((2,), bool),
+                jnp.int64(0),
+            )
+            # device→host conversion stays inside the x64 scope: jax helper
+            # jits (e.g. unstack) would otherwise see f32 defaults
+            bad = np.asarray(bad)
+            out_np = {
+                a: np.asarray(out_store[a])[: case.flat_sizes[a]].reshape(
+                    case.shapes[a]
+                )
+                for a in case.arrays
+            }
+            cov_np = {
+                a: np.asarray(out_cov[a])[: case.flat_sizes[a]].reshape(
+                    case.shapes[a]
+                )
+                for a in case.sparse
+            }
+        if bad[0]:
+            raise KeyError(_OOB_MSG)
+        if bad[1]:
+            raise KeyError(_HOLE_MSG)
+        dense.data.update(out_np)
+        dense.mask.update(cov_np)
+        sched = case.schedule
+        return WavefrontStats(
+            levels=sched.depth,
+            batched_ops=sched.batched_ops,
+            instances=sched.instances,
+            max_width=sched.max_width,
+        )

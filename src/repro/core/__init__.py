@@ -20,7 +20,17 @@ from repro.core.ir import (
     run_sequential,
 )
 from repro.core.isd import build_isd, isd_window, prime_factors
-from repro.core.parallelizer import ParallelizationReport, parallelize
+from repro.core.parallelizer import (
+    BackendSpec,
+    ParallelizationReport,
+    analysis_cache_stats,
+    clear_analysis_cache,
+    execution_backends,
+    get_backend,
+    parallelize,
+    register_backend,
+    registered_backends,
+)
 from repro.core.schedule import (
     CommEvent,
     PipelineSyncPlan,
@@ -43,6 +53,7 @@ from repro.core.wavefront import (
 
 __all__ = [
     "ANTI",
+    "BackendSpec",
     "CONTROL",
     "FLOW",
     "OUTPUT",
@@ -61,8 +72,12 @@ __all__ = [
     "Wait",
     "WavefrontError",
     "WavefrontSchedule",
+    "analysis_cache_stats",
     "analyze",
     "build_isd",
+    "clear_analysis_cache",
+    "execution_backends",
+    "get_backend",
     "eliminate_pattern",
     "eliminate_transitive",
     "fission",
@@ -75,6 +90,8 @@ __all__ = [
     "parallelize",
     "plan_pipeline_sync",
     "prime_factors",
+    "register_backend",
+    "registered_backends",
     "run_sequential",
     "run_threaded",
     "run_wavefront",

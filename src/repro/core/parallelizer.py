@@ -9,12 +9,30 @@
 counts — the framework's public compiler entry point, also used by the
 pipeline-schedule lift (:mod:`repro.core.schedule`) and the Pallas kernel
 schedule generator.
+
+Execution backends are a *registry* (:func:`register_backend`), not a fixed
+tuple: each :class:`BackendSpec` knows how to prepare backend-specific report
+artifacts at parallelize time and how to execute a SyncProgram for the
+differential harness (``tests/oracle.py`` iterates every registered backend,
+so a new backend is differentially tested with zero per-test changes).
+Built-ins: ``threaded`` (the paper's send/wait machine), ``wavefront`` (the
+NumPy level interpreter), and — loaded lazily from :mod:`repro.compile` —
+``xla`` (the structurally cached jitted level loop).
+
+Because steps 1–4 depend on the statement graph but not the loop bounds (the
+elimination window is derived from dependence distances), the expensive
+elimination result is memoized per (statement graph, lower bounds, method):
+repeated requests with the same structure — the serving path re-planning its
+decode loop each batch wave — skip re-analysis entirely.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import importlib
+import threading
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core.dependence import Dependence, analyze, loop_carried
 from repro.core.elimination import (
@@ -22,13 +40,202 @@ from repro.core.elimination import (
     eliminate_pattern,
     eliminate_transitive,
 )
+from repro.core.executor import run_threaded
 from repro.core.fission import FissionResult, fission
 from repro.core.ir import LoopProgram
 from repro.core.sync import SyncProgram, insert_synchronization, strip_dependences
-from repro.core.wavefront import WavefrontSchedule, schedule_wavefronts
+from repro.core.wavefront import (
+    WavefrontSchedule,
+    run_wavefront,
+    schedule_wavefronts,
+)
 
-BACKENDS = ("threaded", "wavefront")
 
+# ---------------------------------------------------------------------- #
+# Backend registry
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One execution backend.
+
+    ``prepare(optimized_sync, retained)`` runs at parallelize time and
+    returns extra :class:`ParallelizationReport` fields (e.g. the wavefront
+    schedule, the compiled artifact); ``differential(sync, *, store,
+    stalls=None)`` executes a SyncProgram and returns its final store — the
+    hook ``tests/oracle.py`` uses to bit-compare every backend against the
+    sequential oracle.
+    """
+
+    name: str
+    prepare: Optional[
+        Callable[[SyncProgram, Tuple[Dependence, ...]], Dict[str, object]]
+    ] = None
+    differential: Optional[Callable[..., Mapping[str, dict]]] = None
+    description: str = ""
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+# Backends that register themselves on first use (import side effect), so
+# e.g. requesting "xla" does not cost a jax import until someone asks for it.
+_LAZY_BACKENDS: Dict[str, str] = {"xla": "repro.compile"}
+
+
+def register_backend(spec: BackendSpec) -> None:
+    """Register (or replace) an execution backend under ``spec.name``."""
+
+    _REGISTRY[spec.name] = spec
+
+
+def registered_backends() -> Tuple[str, ...]:
+    """All backend names, including lazy ones not yet imported."""
+
+    return tuple(_REGISTRY) + tuple(
+        n for n in _LAZY_BACKENDS if n not in _REGISTRY
+    )
+
+
+def get_backend(name: str) -> BackendSpec:
+    """Resolve a backend spec, importing lazy providers on demand."""
+
+    spec = _REGISTRY.get(name)
+    if spec is None and name in _LAZY_BACKENDS:
+        importlib.import_module(_LAZY_BACKENDS[name])
+        spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {registered_backends()}"
+        )
+    return spec
+
+
+def execution_backends() -> Dict[str, BackendSpec]:
+    """Name → spec for every backend with a differential runner (resolves
+    lazy providers) — the iteration surface of ``tests/oracle.py``."""
+
+    for name in registered_backends():
+        get_backend(name)
+    return {
+        name: spec
+        for name, spec in _REGISTRY.items()
+        if spec.differential is not None
+    }
+
+
+register_backend(
+    BackendSpec(
+        name="threaded",
+        prepare=None,
+        differential=lambda sync, *, store=None, stalls=None: run_threaded(
+            sync, stalls=stalls, store=store, compare=False
+        ).store,
+        description="one thread per iteration, send/wait only (the paper's machine)",
+    )
+)
+
+register_backend(
+    BackendSpec(
+        name="wavefront",
+        prepare=lambda optimized, retained: {
+            "wavefront": schedule_wavefronts(optimized, list(retained))
+        },
+        differential=lambda sync, *, store=None, stalls=None: run_wavefront(
+            sync, store=store, compare=False
+        ).store,
+        description="NumPy dependence-level interpreter (O(depth) batched steps)",
+    )
+)
+
+
+# ---------------------------------------------------------------------- #
+# Bounds-free analysis memo
+# ---------------------------------------------------------------------- #
+
+# bounded like the compile caches: a long-running server with varying
+# request structures must not accumulate elimination results forever (and
+# locked like them — concurrent serving threads share this memo)
+_ANALYSIS_MEMO: "collections.OrderedDict[Tuple, EliminationResult]" = (
+    collections.OrderedDict()
+)
+_ANALYSIS_MEMO_MAX = 256
+_ANALYSIS_STATS = {"hits": 0, "misses": 0}
+_ANALYSIS_LOCK = threading.Lock()
+
+
+def analysis_cache_stats() -> Dict[str, int]:
+    with _ANALYSIS_LOCK:
+        return dict(_ANALYSIS_STATS)
+
+
+def clear_analysis_cache() -> None:
+    with _ANALYSIS_LOCK:
+        _ANALYSIS_MEMO.clear()
+        _ANALYSIS_STATS.update(hits=0, misses=0)
+
+
+def _eliminate(
+    prog: LoopProgram, dep_list: Sequence[Dependence], method: str
+) -> EliminationResult:
+    if method == "none":
+        return EliminationResult(
+            retained=tuple(loop_carried(dep_list)),
+            eliminated=(),
+            witnesses={},
+            method="none",
+        )
+    if method == "isd":
+        return eliminate_transitive(prog, dep_list)
+    if method == "pattern":
+        return eliminate_pattern(prog, dep_list)
+    if method == "both":
+        first = eliminate_pattern(prog, dep_list)
+        second = eliminate_transitive(prog, list(first.retained))
+        return EliminationResult(
+            retained=second.retained,
+            eliminated=first.eliminated + second.eliminated,
+            witnesses=second.witnesses,
+            method="pattern+isd",
+        )
+    raise ValueError(f"unknown elimination method: {method!r}")
+
+
+def _memoized_eliminate(
+    prog: LoopProgram, dep_list: Sequence[Dependence], method: str
+) -> EliminationResult:
+    """Elimination keyed by (statement graph, lower bounds, deps, method).
+
+    The ISD window is derived from dependence distances and anchored at the
+    loop *lower* bounds, so the result — including witness paths — is
+    invariant under any change of the upper bounds (iteration count).
+    """
+
+    from repro.compile.structure import program_fingerprint
+
+    key = (
+        program_fingerprint(prog),
+        tuple(lo for lo, _hi in prog.bounds),
+        method,
+        tuple(dep_list),
+    )
+    with _ANALYSIS_LOCK:
+        hit = _ANALYSIS_MEMO.get(key)
+        if hit is not None:
+            _ANALYSIS_MEMO.move_to_end(key)
+            _ANALYSIS_STATS["hits"] += 1
+            return hit
+    elim = _eliminate(prog, dep_list, method)  # built outside the lock
+    with _ANALYSIS_LOCK:
+        _ANALYSIS_MEMO[key] = elim
+        while len(_ANALYSIS_MEMO) > _ANALYSIS_MEMO_MAX:
+            _ANALYSIS_MEMO.popitem(last=False)
+        _ANALYSIS_STATS["misses"] += 1
+    return elim
+
+
+# ---------------------------------------------------------------------- #
+# Report + entry point
+# ---------------------------------------------------------------------- #
 
 @dataclasses.dataclass(frozen=True)
 class ParallelizationReport:
@@ -41,6 +248,8 @@ class ParallelizationReport:
     backend: str = "threaded"
     # level schedule of the optimized sync program (backend="wavefront" only)
     wavefront: Optional[WavefrontSchedule] = None
+    # structural-cache artifact (backend="xla" only): repro.compile handle
+    compiled: Optional[object] = None
 
     def summary(self) -> dict:
         naive = self.naive_sync.sync_instruction_count()
@@ -59,6 +268,9 @@ class ParallelizationReport:
         if self.wavefront is not None:
             out["wavefront_depth"] = self.wavefront.depth
             out["wavefront_batched_ops"] = self.wavefront.batched_ops
+        if self.compiled is not None:
+            out["compile_key"] = self.compiled.key[:16]
+            out["compile_cache"] = self.compiled.cache_stats()
         return out
 
 
@@ -76,53 +288,31 @@ def parallelize(
     Abu-Sufah matching), ``"both"`` (pattern first — cheap — then ISD on the
     survivors), or ``"none"`` (naive synchronization only).
 
-    ``backend``: ``"threaded"`` targets the send/wait machine
+    ``backend``: any registered backend name (:func:`registered_backends`).
+    ``"threaded"`` targets the send/wait machine
     (:func:`repro.core.executor.run_threaded`); ``"wavefront"`` additionally
     compiles the optimized sync program to a dependence-level schedule for
-    :func:`repro.core.wavefront.run_wavefront` — O(depth) vectorized steps
-    instead of O(iterations) threads.
+    :func:`repro.core.wavefront.run_wavefront`; ``"xla"`` resolves the
+    structural compile cache (:mod:`repro.compile`) and attaches the
+    compiled artifact to the report — repeated structurally equal requests
+    share the artifact and skip re-analysis (see the ``compile_cache``
+    counters in :meth:`ParallelizationReport.summary`).
     """
 
-    if backend not in BACKENDS:
-        raise ValueError(
-            f"unknown backend {backend!r}; expected one of {BACKENDS}"
-        )
+    spec = get_backend(backend)
 
     dep_list = list(deps) if deps is not None else analyze(prog)
     fiss = fission(prog, dep_list)
     naive = insert_synchronization(prog, dep_list, merge=False)
 
-    if method == "none":
-        elim = EliminationResult(
-            retained=tuple(loop_carried(dep_list)),
-            eliminated=(),
-            witnesses={},
-            method="none",
-        )
-    elif method == "isd":
-        elim = eliminate_transitive(prog, dep_list)
-    elif method == "pattern":
-        elim = eliminate_pattern(prog, dep_list)
-    elif method == "both":
-        first = eliminate_pattern(prog, dep_list)
-        second = eliminate_transitive(prog, list(first.retained))
-        elim = EliminationResult(
-            retained=second.retained,
-            eliminated=first.eliminated + second.eliminated,
-            witnesses=second.witnesses,
-            method="pattern+isd",
-        )
-    else:
-        raise ValueError(f"unknown elimination method: {method!r}")
+    elim = _memoized_eliminate(prog, dep_list, method)
 
     optimized = strip_dependences(naive, elim.eliminated)
     if merge_sends:
         optimized = insert_synchronization(
             prog, list(elim.retained), merge=True
         )
-    wavefront = None
-    if backend == "wavefront":
-        wavefront = schedule_wavefronts(optimized, list(elim.retained))
+    extra = spec.prepare(optimized, elim.retained) if spec.prepare else {}
     return ParallelizationReport(
         program=prog,
         dependences=tuple(dep_list),
@@ -131,5 +321,5 @@ def parallelize(
         elimination=elim,
         optimized_sync=optimized,
         backend=backend,
-        wavefront=wavefront,
+        **extra,
     )

@@ -28,13 +28,17 @@ both ``(1, -1)`` and ``(-1, 1)`` edges) can close cycles through the
 iteration space; those are rejected with :class:`WavefrontError` carrying a
 diagnostic rather than silently mis-scheduling.
 
-Three executors now coexist (see ROADMAP "Execution backends"):
+Four executors now coexist (see ROADMAP "Execution backends"):
 
   * :func:`repro.core.ir.run_sequential` — the semantic oracle;
   * :func:`repro.core.executor.run_threaded` — the paper's machine, used to
     demonstrate races and count send/wait traffic;
-  * :func:`run_wavefront` (here) — the fast path: O(depth) vectorized steps
-    instead of O(iterations) threads.
+  * :func:`run_wavefront` (here) — the NumPy interpreter of the level
+    schedule: O(depth) vectorized steps instead of O(iterations) threads;
+  * :func:`repro.compile.run_xla` — the *compiled* form of the same
+    schedule: :class:`WavefrontSchedule` is the hand-off IR that
+    :mod:`repro.compile.lowering` packs into padded level buffers and jits
+    as a single XLA level loop, cached structurally across bounds.
 """
 
 from __future__ import annotations
@@ -75,6 +79,10 @@ class WavefrontSchedule:
     levels: Tuple[Tuple[WavefrontGroup, ...], ...]
     model: str
     retained: Tuple[Dependence, ...]
+    # statement → processor assignment (procmap model only) — carried so a
+    # schedule is a complete lowering hand-off (repro.compile re-layers it
+    # for other bounds under the same model)
+    processors: Optional[Dict[str, object]] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -236,7 +244,11 @@ def schedule_levels(
         for groups in by_level
     )
     return WavefrontSchedule(
-        program=prog, levels=levels, model=model, retained=tuple(deps)
+        program=prog,
+        levels=levels,
+        model=model,
+        retained=tuple(deps),
+        processors=dict(processors) if processors else None,
     )
 
 
@@ -275,20 +287,26 @@ class _DenseStore:
         self.data: Dict[str, np.ndarray] = {}
         self.mask: Dict[str, np.ndarray] = {}  # only sparse arrays
         for arr, cells in store.items():
-            keys = list(cells.keys())
-            ndim = len(keys[0])
-            lo = tuple(min(k[d] for k in keys) for d in range(ndim))
-            hi = tuple(max(k[d] for k in keys) for d in range(ndim))
-            shape = tuple(h - l + 1 for l, h in zip(lo, hi))
+            if not cells:
+                raise KeyError(
+                    f"array {arr!r} in the provided store has no initialized "
+                    "cells — the dense backends need the accessed cells "
+                    "up front (sequential execution would fail on its first "
+                    "access too)"
+                )
+            keys = np.asarray(list(cells.keys()), dtype=np.int64)
+            lo_v = keys.min(axis=0)
+            shape = tuple((keys.max(axis=0) - lo_v + 1).tolist())
+            idx = tuple((keys - lo_v).T)
             dense = np.zeros(shape, dtype=np.float64)
-            for k, v in cells.items():
-                dense[tuple(x - l for x, l in zip(k, lo))] = v
-            self.origin[arr] = lo
+            dense[idx] = np.fromiter(
+                cells.values(), dtype=np.float64, count=len(cells)
+            )
+            self.origin[arr] = tuple(lo_v.tolist())
             self.data[arr] = dense
             if len(cells) != dense.size:
                 covered = np.zeros(shape, dtype=bool)
-                for k in keys:
-                    covered[tuple(x - l for x, l in zip(k, lo))] = True
+                covered[idx] = True
                 self.mask[arr] = covered
 
     def _index(self, arr: str, pts: np.ndarray) -> Tuple[np.ndarray, ...]:
@@ -325,12 +343,16 @@ class _DenseStore:
         for arr, dense in self.data.items():
             lo = self.origin[arr]
             covered = self.mask.get(arr)
-            cells: dict = {}
-            for flat, v in np.ndenumerate(dense):
-                if covered is not None and not covered[flat]:
-                    continue
-                cells[tuple(x + l for x, l in zip(flat, lo))] = float(v)
-            out[arr] = cells
+            if covered is None:
+                idx = np.indices(dense.shape).reshape(dense.ndim, -1).T
+                vals = dense.ravel()
+            else:
+                idx = np.argwhere(covered)
+                vals = dense[tuple(idx.T)]
+            idx = idx + np.asarray(lo, dtype=np.int64)
+            out[arr] = dict(
+                zip(map(tuple, idx.tolist()), vals.tolist())
+            )
         return out
 
 

@@ -128,6 +128,36 @@ def kloop_wavefronts(depth: int = 2, steps: int = 16) -> WavefrontSchedule:
     return plan_pipeline(depth, steps).wavefront
 
 
+# retained deps per buffer depth: kloop_dependences and the elimination
+# window derive from distances and the fixed lower bound only, never steps
+_KLOOP_RETAINED: dict = {}
+
+
+def compile_kloop(depth: int = 2, steps: int = 16):
+    """Resolve the K-loop plan through the structural compile cache.
+
+    The cache key covers the statement graph, the retained dependences and
+    the procmap model — *not* ``steps`` — so re-planning the same pipeline at
+    a different K extent is a structural hit: only the per-bounds level
+    tables are (re)built (the per-depth elimination is memoized here, so a
+    hit really does skip all analysis).  Returns ``(CompiledProgram, hit)``.
+    """
+
+    from repro.compile import get_or_compile
+
+    retained = _KLOOP_RETAINED.get(depth)
+    if retained is None:
+        retained = _KLOOP_RETAINED[depth] = plan_pipeline(
+            depth, steps
+        ).retained
+    return get_or_compile(
+        make_kloop_program(steps),
+        retained,
+        model="procmap",
+        processors=PROCESSORS,
+    )
+
+
 def overlapped_levels(wf: WavefrontSchedule) -> int:
     """Levels in which a tile LOAD shares a wavefront with a COMPUTE — the
     mechanical signature of double buffering: with D ≥ 2 the layering puts

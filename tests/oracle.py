@@ -1,19 +1,26 @@
 """Differential-testing harness: one entry point that runs a LoopProgram
-through every executor × synchronization variant and asserts bit-equality.
+through every *registered* execution backend × synchronization variant and
+asserts bit-equality.
 
-The three executors (see ROADMAP "Execution backends"):
+The executors (see ROADMAP "Execution backends"):
 
   * ``run_sequential`` — the semantic oracle, always authoritative;
-  * ``run_threaded``   — the paper's machine (one thread per iteration,
+  * ``threaded``   — the paper's machine (one thread per iteration,
     send/wait only), authoritative for sync *sufficiency* under races;
-  * ``run_wavefront``  — the fast static-schedule backend, authoritative
-    for nothing by itself — which is exactly why every later PR's tests
-    route through this harness instead of trusting it.
+  * ``wavefront``  — the NumPy level-schedule interpreter;
+  * ``xla``        — the structurally cached jitted level loop
+    (:mod:`repro.compile`), authoritative for nothing by itself — which is
+    exactly why every later PR's tests route through this harness instead of
+    trusting it.
+
+Backends are discovered through the parallelizer registry
+(:func:`repro.core.execution_backends`), so registering a new backend makes
+it differentially tested here with zero per-test changes.
 
 ``assert_equivalent`` is the canonical check: for each elimination method it
-builds naive and optimized sync programs and demands that threaded and
-wavefront execution both reproduce the sequential store bit-for-bit from the
-same initial memory image.
+builds naive and optimized sync programs and demands that every registered
+backend reproduces the sequential store bit-for-bit from the same initial
+memory image.
 """
 
 from __future__ import annotations
@@ -22,13 +29,32 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core import (
     LoopProgram,
+    execution_backends,
     parallelize,
     run_sequential,
-    run_threaded,
-    run_wavefront,
 )
 
 METHODS = ("none", "isd", "pattern", "both")
+
+
+def _backend_names(
+    backends: Optional[Sequence[str]], threaded: bool
+) -> Tuple[str, ...]:
+    known = tuple(execution_backends())
+    names = tuple(backends) if backends is not None else known
+    unknown = [n for n in names if n not in known]
+    if unknown:
+        raise ValueError(
+            f"unknown backend(s) {unknown}; registered: {known}"
+        )
+    if not threaded:
+        names = tuple(n for n in names if n != "threaded")
+    if not names:
+        raise ValueError(
+            "no backends left to compare — a differential run against "
+            "nothing would pass vacuously"
+        )
+    return names
 
 
 def run_all_backends(
@@ -38,29 +64,30 @@ def run_all_backends(
     stalls: Optional[Mapping[Tuple[str, Tuple[int, ...]], float]] = None,
     threaded: bool = True,
     store: Optional[Mapping[str, dict]] = None,
+    backends: Optional[Sequence[str]] = None,
 ) -> Dict[str, dict]:
-    """Execute ``prog`` on every backend × method; return label → store.
+    """Execute ``prog`` on every registered backend × method.
 
-    Labels: ``sequential``, ``threaded/<method>/naive``,
-    ``threaded/<method>/optimized``, ``wavefront/<method>/naive``,
-    ``wavefront/<method>/optimized``.  All runs start from the same initial
-    memory image, so stores are comparable cell for cell.
+    Returns label → store with labels ``sequential`` and
+    ``<backend>/<method>/<naive|optimized>``.  All runs start from the same
+    initial memory image, so stores are comparable cell for cell.
+    ``threaded=False`` drops the (slow) thread machine; ``backends`` narrows
+    the set explicitly.
     """
 
+    names = _backend_names(backends, threaded)
+    specs = execution_backends()
     init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
     results: Dict[str, dict] = {
         "sequential": run_sequential(prog, init),
     }
     for method in methods:
-        rep = parallelize(prog, method=method, backend="wavefront")
+        rep = parallelize(prog, method=method)
         variants = {"naive": rep.naive_sync, "optimized": rep.optimized_sync}
         for label, sync in variants.items():
-            if threaded:
-                t = run_threaded(sync, stalls=stalls, store=init, compare=False)
-                results[f"threaded/{method}/{label}"] = t.store
-            schedule = rep.wavefront if label == "optimized" else None
-            w = run_wavefront(sync, schedule=schedule, store=init, compare=False)
-            results[f"wavefront/{method}/{label}"] = w.store
+            for name in names:
+                out = specs[name].differential(sync, store=init, stalls=stalls)
+                results[f"{name}/{method}/{label}"] = out
     return results
 
 
@@ -70,6 +97,7 @@ def assert_equivalent(
     methods: Sequence[str] = METHODS,
     stalls: Optional[Mapping[Tuple[str, Tuple[int, ...]], float]] = None,
     threaded: bool = True,
+    backends: Optional[Sequence[str]] = None,
 ) -> Dict[str, dict]:
     """Assert every backend/variant reproduces the sequential store exactly.
 
@@ -79,7 +107,11 @@ def assert_equivalent(
     """
 
     results = run_all_backends(
-        prog, methods=methods, stalls=stalls, threaded=threaded
+        prog,
+        methods=methods,
+        stalls=stalls,
+        threaded=threaded,
+        backends=backends,
     )
     expect = results["sequential"]
     for label, store in results.items():

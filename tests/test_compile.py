@@ -1,0 +1,380 @@
+"""repro.compile: the jitted XLA backend and its structural cache.
+
+Differential equivalence itself rides on tests/oracle.py (which iterates
+every registered backend, xla included — see test_wavefront.py); this module
+covers what is *specific* to the compiled path: cache key semantics
+(structural hits across bounds, misses across structure), the two cache
+levels and their counters, report integration, error parity with the NumPy
+backend, and the under-synchronization failure mode staying deterministic.
+"""
+
+import pytest
+
+from oracle import assert_equivalent
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    analyze,
+    insert_synchronization,
+    parallelize,
+    paper_alg4,
+    paper_alg6,
+    registered_backends,
+    run_sequential,
+)
+from repro.core.dependence import paper_alg4_dependences
+from repro.compile import (
+    CompileCache,
+    clear_compile_cache,
+    compile_cache_stats,
+    run_xla,
+)
+
+
+def _chain_program(n: int) -> LoopProgram:
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -1),)),
+            Statement("S2", ArrayRef("b", 0), (ArrayRef("a", -2),)),
+        ),
+        bounds=((1, n),),
+    )
+
+
+class TestBackendRegistration:
+    def test_xla_is_registered(self):
+        assert "xla" in registered_backends()
+
+    def test_parallelize_attaches_compiled_artifact(self):
+        rep = parallelize(paper_alg6(8), method="isd", backend="xla")
+        assert rep.compiled is not None
+        assert rep.backend == "xla"
+        s = rep.summary()
+        assert s["compile_key"] == rep.compiled.key[:16]
+        assert set(s["compile_cache"]) == {
+            "hits", "misses", "table_hits", "table_misses",
+        }
+
+    def test_oracle_runs_xla_automatically(self):
+        res = assert_equivalent(_chain_program(7), methods=("isd",))
+        assert "xla/isd/optimized" in res
+
+
+class TestStructuralCache:
+    def test_bounds_change_is_structural_hit(self):
+        cache = CompileCache()
+        sync8 = insert_synchronization(_chain_program(8), analyze(_chain_program(8)))
+        sync64 = insert_synchronization(_chain_program(64), analyze(_chain_program(64)))
+        r1 = run_xla(sync8, cache=cache)
+        r2 = run_xla(sync64, cache=cache)
+        assert r1.cache_events == {"structural": "miss", "tables": "miss"}
+        assert r2.cache_events == {"structural": "hit", "tables": "miss"}
+        assert r1.compiled is r2.compiled
+        assert r1.matches_sequential and r2.matches_sequential
+
+    def test_warm_call_hits_both_levels(self):
+        cache = CompileCache()
+        sync = insert_synchronization(_chain_program(9), analyze(_chain_program(9)))
+        run_xla(sync, cache=cache)
+        r = run_xla(sync, cache=cache)
+        assert r.cache_events == {"structural": "hit", "tables": "hit"}
+        assert cache.stats.as_dict() == {
+            "hits": 1, "misses": 1, "table_hits": 1, "table_misses": 1,
+        }
+
+    def test_different_retained_deps_miss(self):
+        """naive vs optimized sync of the same loop retain different
+        dependence sets — distinct artifacts, no false sharing."""
+
+        cache = CompileCache()
+        rep = parallelize(paper_alg6(8), method="isd")
+        r_naive = run_xla(rep.naive_sync, cache=cache)
+        r_opt = run_xla(rep.optimized_sync, cache=cache)
+        assert r_opt.cache_events["structural"] == "miss"
+        assert r_naive.compiled is not r_opt.compiled
+
+    def test_store_layout_participates_in_table_cache(self):
+        cache = CompileCache()
+        prog = _chain_program(6)
+        sync = insert_synchronization(prog, analyze(prog))
+        run_xla(sync, cache=cache)  # default initial_store layout
+        wide = prog.initial_store(pad=12)
+        r = run_xla(sync, store=wide, cache=cache)
+        assert r.cache_events == {"structural": "hit", "tables": "miss"}
+        assert r.matches_sequential
+
+    def test_clear_compile_cache_resets_counters(self):
+        sync = insert_synchronization(_chain_program(5), analyze(_chain_program(5)))
+        run_xla(sync)
+        clear_compile_cache()
+        s = compile_cache_stats()
+        assert s == {
+            "hits": 0, "misses": 0, "table_hits": 0, "table_misses": 0,
+        }
+
+    def test_kloop_replans_are_structural_hits(self):
+        from repro.kernels.pipelined_matmul.schedule import compile_kloop
+
+        c16, _ = compile_kloop(2, 16)
+        c128, hit = compile_kloop(2, 128)
+        assert hit and c16 is c128
+        _c, hit_depth1 = compile_kloop(1, 16)
+        assert not hit_depth1  # depth changes the retained deps
+
+    def test_serving_wave_plans_share_one_artifact(self):
+        from repro.launch.serve import plan_wave_sync
+
+        p1 = plan_wave_sync(16)
+        p2 = plan_wave_sync(16)
+        p3 = plan_wave_sync(64)  # bounds only — same structure
+        assert p1.compiled is p2.compiled is p3.compiled
+
+
+class TestExecutionSemantics:
+    def test_under_synchronized_mis_executes_deterministically(self):
+        """The paper's own Alg. 5 graph misses S2 δf(b,Δ=1) S1; like the
+        NumPy layering, the compiled path mis-executes it deterministically."""
+
+        sync = insert_synchronization(paper_alg4(8), paper_alg4_dependences())
+        assert not run_xla(sync).matches_sequential
+
+    def test_guarded_program_bit_equal(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("p", 0), (ArrayRef("p", -1),)),
+                Statement(
+                    "S2",
+                    ArrayRef("a", 0),
+                    (ArrayRef("a", -1),),
+                    guard=ArrayRef("p", -1),
+                ),
+            ),
+            bounds=((1, 7),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        assert run_xla(sync).matches_sequential
+
+    def test_procmap_model_kloop(self):
+        from repro.core.elimination import synchronized_set
+        from repro.core.wavefront import schedule_levels
+        from repro.kernels.pipelined_matmul.schedule import (
+            PROCESSORS,
+            kloop_dependences,
+            make_kloop_program,
+        )
+
+        prog = make_kloop_program(8)
+        deps = kloop_dependences(2)
+        retained = synchronized_set(deps, "procmap", PROCESSORS)
+        sched = schedule_levels(
+            prog, retained, model="procmap", processors=PROCESSORS
+        )
+        sync = insert_synchronization(prog, deps)
+        r = run_xla(
+            sync, schedule=sched, model="procmap", processors=PROCESSORS
+        )
+        assert r.matches_sequential
+
+    def test_schedule_carries_its_model(self):
+        """Passing a procmap schedule alone must not re-layer it as doall
+        (run_wavefront parity: the schedule is the complete hand-off)."""
+
+        from repro.core.elimination import synchronized_set
+        from repro.core.wavefront import schedule_levels
+        from repro.kernels.pipelined_matmul.schedule import (
+            PROCESSORS,
+            kloop_dependences,
+            make_kloop_program,
+        )
+
+        prog = make_kloop_program(8)
+        deps = kloop_dependences(2)
+        retained = synchronized_set(deps, "procmap", PROCESSORS)
+        sched = schedule_levels(
+            prog, retained, model="procmap", processors=PROCESSORS
+        )
+        sync = insert_synchronization(prog, deps)
+        r = run_xla(sync, schedule=sched)  # no model/processors kwargs
+        assert r.schedule.depth == sched.depth
+        assert r.matches_sequential
+
+    def test_truthiness_branching_compute_raises(self):
+        """`if lane:` can't be vectorized — it must fail loudly
+        (XlaLoweringError), never silently take one branch for all lanes."""
+
+        from repro.compile import XlaLoweringError
+
+        prog = LoopProgram(
+            statements=(
+                Statement(
+                    "S1",
+                    ArrayRef("b", 0),
+                    (ArrayRef("a", -1),),
+                    compute=lambda a: 1.0 if a else 2.0,
+                ),
+            ),
+            bounds=((1, 6),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        with pytest.raises(XlaLoweringError, match="not traceable"):
+            run_xla(sync, compare=False)
+
+    def test_equality_comparison_in_compute(self):
+        """``==`` inside a compute fn must compare lane *values*, not proxy
+        identity (object identity would be silently False everywhere)."""
+
+        prog = LoopProgram(
+            statements=(
+                Statement(
+                    "S1",
+                    ArrayRef("a", 0),
+                    (ArrayRef("a", -1),),
+                    compute=lambda x: (x == x * 1.0) * 2.0 + 1.0,
+                ),
+            ),
+            bounds=((1, 6),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        init = prog.initial_store()
+        r = run_xla(sync, store=init, compare=False)
+        assert r.store == run_sequential(prog, init)
+
+    def test_report_mirrors_wavefront_stats(self):
+        rep = parallelize(paper_alg6(6), method="isd", backend="wavefront")
+        r = run_xla(rep.optimized_sync, schedule=rep.wavefront)
+        assert r.stats.levels == rep.wavefront.depth
+        assert r.stats.instances == rep.wavefront.instances
+        assert r.schedule.depth == rep.wavefront.depth
+
+
+class TestErrorParity:
+    """Same KeyError contract as the NumPy wavefront backend."""
+
+    def test_out_of_store_read_raises(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -20),)),
+            ),
+            bounds=((0, 4),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        with pytest.raises(KeyError, match="initialized store"):
+            run_xla(sync)
+
+    def test_out_of_store_write_raises(self):
+        prog = LoopProgram(
+            statements=(Statement("S1", ArrayRef("a", 20), ()),),
+            bounds=((0, 2),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        with pytest.raises(KeyError, match="initialized store"):
+            run_xla(sync, store={"a": {(i,): 0.0 for i in range(4)}})
+
+    def test_sparse_store_hole_read_raises(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -1),)),
+            ),
+            bounds=((1, 4),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        sparse = {
+            "a": {(i,): 0.0 for i in range(0, 5)},
+            "b": {(0,): 1.0, (4,): 2.0},  # holes at 1..3
+        }
+        with pytest.raises(KeyError, match="uninitialized"):
+            run_xla(sync, store=sparse)
+
+    def test_sparse_store_covered_accesses_work(self):
+        prog = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("b", -1),)),
+            ),
+            bounds=((1, 4),),
+        )
+        sync = insert_synchronization(prog, analyze(prog))
+        store = {
+            "a": {(i,): 0.0 for i in range(0, 5)},
+            "b": {(i,): float(i) for i in (0, 1, 2, 4)},  # (3,) unused hole
+        }
+        r = run_xla(sync, store=store, compare=False)
+        assert r.store == run_sequential(prog, store)
+
+    def test_missing_array_raises(self):
+        prog = _chain_program(4)
+        sync = insert_synchronization(prog, analyze(prog))
+        with pytest.raises(KeyError, match="missing arrays"):
+            run_xla(sync, store={"a": {(i,): 0.0 for i in range(-8, 12)}})
+
+    def test_empty_array_in_store_raises_keyerror(self):
+        """An empty cells dict must produce the KeyError contract, not a
+        numpy reduction ValueError (parity with run_sequential's failure
+        on first access)."""
+
+        from repro.core import run_wavefront
+
+        prog = _chain_program(4)
+        sync = insert_synchronization(prog, analyze(prog))
+        store = {"a": {(i,): 0.0 for i in range(-8, 12)}, "b": {}}
+        with pytest.raises(KeyError, match="no initialized cells"):
+            run_xla(sync, store=store)
+        with pytest.raises(KeyError, match="no initialized cells"):
+            run_wavefront(sync, store=store)
+
+    def test_structural_cache_is_bounded(self):
+        from repro.compile import CompileCache
+
+        cache = CompileCache()
+        cache.MAX_ENTRIES = 4
+        for k in range(9):
+            prog = LoopProgram(
+                statements=(
+                    Statement("S1", ArrayRef("a", 0), (ArrayRef(f"b{k}", -1),)),
+                ),
+                bounds=((1, 5),),
+            )
+            sync = insert_synchronization(prog, analyze(prog))
+            run_xla(sync, cache=cache, compare=False)
+        assert len(cache) <= 4
+
+
+class TestAnalysisMemo:
+    def test_elimination_memoized_across_bounds(self):
+        from repro.core import analysis_cache_stats, clear_analysis_cache
+
+        clear_analysis_cache()
+        parallelize(_chain_program(8), method="isd")
+        before = analysis_cache_stats()
+        rep = parallelize(_chain_program(200), method="isd")  # upper bound only
+        after = analysis_cache_stats()
+        assert after["hits"] == before["hits"] + 1
+        assert rep.optimized_sync.program.bounds == ((1, 200),)
+
+
+@pytest.mark.slow
+class TestWarmSpeed:
+    def test_warm_xla_beats_numpy_wavefront_alg6_1024(self):
+        """The acceptance bar of ISSUE 2: warm-cache xla under the NumPy
+        wavefront interpreter's time on Alg. 6 @ 1024 (min-of-5 each)."""
+
+        import time
+
+        from repro.core import run_wavefront
+
+        rep = parallelize(paper_alg6(1025), method="isd", backend="xla")
+        wrep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+        fn_xla = lambda: run_xla(rep.optimized_sync, compare=False)
+        fn_np = lambda: run_wavefront(
+            wrep.optimized_sync, schedule=wrep.wavefront, compare=False
+        )
+        fn_xla(), fn_np()  # warm both sides
+        t_xla = t_np = float("inf")
+        for _ in range(7):  # interleaved so load inflates both sides alike
+            t0 = time.perf_counter()
+            fn_xla()
+            t_xla = min(t_xla, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fn_np()
+            t_np = min(t_np, time.perf_counter() - t0)
+        assert t_xla < t_np, f"xla {t_xla*1e3:.2f}ms vs numpy {t_np*1e3:.2f}ms"

@@ -1,0 +1,55 @@
+"""Smoke tests running the examples' ``main()`` in-process, so the examples
+cannot rot against API changes (they are the first thing a reader runs)."""
+
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parents[1] / "examples"
+
+
+def _load(name: str):
+    spec = importlib.util.spec_from_file_location(name, EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_main(capsys):
+    mod = _load("quickstart")
+    mod.main()
+    out = capsys.readouterr().out
+    assert "synchronization elimination" in out
+    assert "threaded execution matches sequential: True" in out
+
+
+def test_pipeline_demo_main(monkeypatch, capsys):
+    mod = _load("pipeline_demo")
+    monkeypatch.setattr(
+        sys, "argv", ["pipeline_demo.py", "--stages", "4", "--microbatches", "4"]
+    )
+    mod.main()
+    out = capsys.readouterr().out
+    assert "matches sequential reference: True" in out
+
+
+@pytest.mark.slow
+def test_serve_main(monkeypatch, capsys):
+    """The serving driver end to end (smoke scale), including the per-wave
+    sync plan riding the structural compile cache."""
+
+    import importlib
+
+    mod = importlib.import_module("repro.launch.serve")
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        ["serve.py", "--arch", "yi_6b", "--requests", "6", "--slots", "3",
+         "--max-new", "3"],
+    )
+    mod.main()
+    out = capsys.readouterr().out
+    assert "decode sync plan:" in out
+    assert "compile cache" in out

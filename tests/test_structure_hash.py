@@ -1,0 +1,455 @@
+"""Property tests for the structural compile-cache key (seeded-random
+programs; no hypothesis dependency, so this guard always runs — same idiom
+as test_strip_properties.py).
+
+The key must be exactly as fine as the lowering specializes:
+
+  * **invariant** under anything the compiled artifact absorbs — loop
+    bounds (the per-bounds tables are a second-level cache), re-created
+    program/dependence objects, and compute-function *identity* (a
+    behaviorally identical function compiled from the same code maps to the
+    same key, or the serving path would never hit);
+  * **sensitive** to anything that changes the generated executable — the
+    statement graph (accesses, offsets, guards, compute code, captured
+    constants), the retained dependence set, and the execution model.
+
+A false hit here is a silent wrong-code cache — these tests are the no-false-
+hits guard."""
+
+import dataclasses
+import random
+import types
+
+import pytest
+
+from repro.core import ArrayRef, LoopProgram, Statement, analyze, loop_carried
+from repro.compile import structural_key
+
+ARRAYS = ["a", "b", "c", "d"]
+SEEDS = list(range(30))
+
+
+def random_program(seed: int, scale: float = 1.0) -> LoopProgram:
+    rng = random.Random(seed)
+    stmts = []
+    for k in range(rng.randint(1, 5)):
+        reads = tuple(
+            ArrayRef(rng.choice(ARRAYS), -rng.randint(0, 3))
+            for _ in range(rng.randint(0, 3))
+        )
+        stmts.append(
+            Statement(
+                f"S{k+1}",
+                ArrayRef(rng.choice(ARRAYS), 0),
+                reads,
+                compute=make_compute(rng.uniform(0.5, 2.0) * scale),
+            )
+        )
+    return LoopProgram(
+        statements=tuple(stmts), bounds=((1, 1 + rng.randint(3, 9)),)
+    )
+
+
+def make_compute(weight: float):
+    def compute(*reads: float) -> float:
+        acc = weight
+        for k, r in enumerate(reads):
+            acc = acc + r / (k + 2)
+        return acc
+
+    return compute
+
+
+def clone_function(fn):
+    """A new function object with the same code/closure/defaults — a pure
+    identity change."""
+
+    out = types.FunctionType(
+        fn.__code__, fn.__globals__, fn.__name__, fn.__defaults__, fn.__closure__
+    )
+    assert out is not fn
+    return out
+
+
+def rebuild(prog: LoopProgram, *, bounds=None, clone_computes=False):
+    stmts = tuple(
+        dataclasses.replace(
+            s, compute=clone_function(s.compute) if clone_computes else s.compute
+        )
+        for s in prog.statements
+    )
+    return LoopProgram(statements=stmts, bounds=bounds or prog.bounds)
+
+
+def key_of(prog: LoopProgram, deps=None, model="doall") -> str:
+    retained = list(loop_carried(deps if deps is not None else analyze(prog)))
+    return structural_key(prog, retained, model)
+
+
+class TestInvariance:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_bounds_change_keeps_key(self, seed):
+        prog = random_program(seed)
+        lo = prog.bounds[0][0]
+        grown = rebuild(prog, bounds=((lo, lo + 517),))
+        assert key_of(prog) == key_of(grown)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_compute_identity_change_keeps_key(self, seed):
+        prog = random_program(seed)
+        cloned = rebuild(prog, clone_computes=True)
+        assert key_of(prog) == key_of(cloned)
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_object_identity_of_dependences_irrelevant(self, seed):
+        prog = random_program(seed)
+        deps1 = analyze(prog)
+        deps2 = analyze(prog)  # fresh Dependence objects
+        assert key_of(prog, deps1) == key_of(prog, deps2)
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_retained_order_irrelevant(self, seed):
+        prog = random_program(seed)
+        retained = list(loop_carried(analyze(prog)))
+        assert structural_key(prog, retained) == structural_key(
+            prog, list(reversed(retained))
+        )
+
+
+class TestSensitivity:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_dropping_a_retained_dep_changes_key(self, seed):
+        prog = random_program(seed)
+        retained = list(loop_carried(analyze(prog)))
+        if not retained:
+            pytest.skip("no loop-carried dependences in this draw")
+        assert structural_key(prog, retained) != structural_key(
+            prog, retained[1:]
+        )
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_distance_edit_changes_key(self, seed):
+        prog = random_program(seed)
+        retained = list(loop_carried(analyze(prog)))
+        if not retained:
+            pytest.skip("no loop-carried dependences in this draw")
+        bumped = [
+            dataclasses.replace(
+                d, distance=tuple(x + 1 for x in d.distance)
+            )
+            if i == 0
+            else d
+            for i, d in enumerate(retained)
+        ]
+        assert structural_key(prog, retained) != structural_key(prog, bumped)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_statement_graph_edit_changes_key(self, seed):
+        prog = random_program(seed)
+        s0 = prog.statements[0]
+        edited = (
+            dataclasses.replace(
+                s0, reads=s0.reads + (ArrayRef("d", -1),)
+            ),
+        ) + prog.statements[1:]
+        other = LoopProgram(statements=edited, bounds=prog.bounds)
+        assert key_of(prog) != key_of(other)
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_offset_edit_changes_key(self, seed):
+        prog = random_program(seed)
+        s0 = prog.statements[0]
+        edited = (
+            dataclasses.replace(s0, write=ArrayRef(s0.write.array, 1)),
+        ) + prog.statements[1:]
+        other = LoopProgram(statements=edited, bounds=prog.bounds)
+        assert key_of(prog) != key_of(other)
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_captured_constant_changes_key(self, seed):
+        """Two computes from the same source but different closure values
+        are behaviorally different — must not share a key."""
+
+        prog = random_program(seed)
+        other = LoopProgram(
+            statements=tuple(
+                dataclasses.replace(s, compute=make_compute(3.14159))
+                for s in prog.statements
+            ),
+            bounds=prog.bounds,
+        )
+        assert key_of(prog) != key_of(other)
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_model_changes_key(self, seed):
+        prog = random_program(seed)
+        assert key_of(prog, model="doall") != key_of(prog, model="dswp")
+
+    def test_referenced_global_value_changes_key(self):
+        """Identical bytecode reading different module globals must not
+        collide (that would be wrong-code cache reuse)."""
+
+        from repro.compile import compute_fingerprint
+
+        f1 = eval("lambda x: x * SCALE", {"SCALE": 2.0})
+        f2 = eval("lambda x: x * SCALE", {"SCALE": 3.0})
+        f3 = eval("lambda x: x * SCALE", {"SCALE": 2.0})
+        assert compute_fingerprint(f1) == compute_fingerprint(f3)
+        assert compute_fingerprint(f1) != compute_fingerprint(f2)
+
+    def test_kwonly_default_changes_key(self):
+        from repro.compile import compute_fingerprint
+
+        def make(s):
+            return lambda a, *, scale=s: a * scale
+
+        assert compute_fingerprint(make(2.0)) == compute_fingerprint(make(2.0))
+        assert compute_fingerprint(make(2.0)) != compute_fingerprint(make(3.0))
+
+    def test_large_captured_array_contents_change_key(self):
+        """repr() truncates big arrays — the fingerprint must hash their
+        full contents, or distinct lookup tables collide."""
+
+        import numpy as np
+
+        from repro.compile import compute_fingerprint
+
+        t1 = np.zeros(2000)
+        t2 = t1.copy()
+        t2[500] = 9.0
+
+        def make(table):
+            return lambda a: a + table[0]
+
+        assert compute_fingerprint(make(t1)) == compute_fingerprint(
+            make(t1.copy())
+        )
+        assert compute_fingerprint(make(t1)) != compute_fingerprint(make(t2))
+
+    def test_stateful_callable_object_state_changes_key(self):
+        from repro.compile import compute_fingerprint
+
+        class Scaler:
+            def __init__(self, s):
+                self.s = s
+
+            def __call__(self, a):
+                return a * self.s
+
+        assert compute_fingerprint(Scaler(2.0)) == compute_fingerprint(
+            Scaler(2.0)
+        )
+        assert compute_fingerprint(Scaler(2.0)) != compute_fingerprint(
+            Scaler(3.0)
+        )
+
+    def test_captured_object_state_changes_key(self):
+        """Default reprs embed reusable addresses — captured objects must be
+        fingerprinted by (type, state), never by repr address."""
+
+        from repro.compile import compute_fingerprint
+
+        class Cfg:
+            def __init__(self, k):
+                self.k = k
+
+        def make(cfg):
+            return lambda a: a * cfg.k
+
+        assert compute_fingerprint(make(Cfg(2))) == compute_fingerprint(
+            make(Cfg(2))
+        )
+        assert compute_fingerprint(make(Cfg(2))) != compute_fingerprint(
+            make(Cfg(3))
+        )
+
+    def test_uninspectable_captured_value_never_hits(self):
+        """A captured value with no introspectable state and an
+        address-bearing repr fingerprints uniquely every time — a forced
+        miss beats a possible wrong-code hit (addresses get reused)."""
+
+        from repro.compile import compute_fingerprint
+
+        v = object()
+        mk = eval("lambda v: (lambda a: a if v else a)", {})
+        assert compute_fingerprint(mk(v)) != compute_fingerprint(mk(v))
+
+    def test_module_attribute_constant_changes_key(self):
+        """``config.SCALE`` (one attribute hop through a module global)
+        participates by value — mutating the module constant changes the
+        key instead of silently reusing the stale artifact."""
+
+        import types as _types
+
+        from repro.compile import compute_fingerprint
+
+        config = _types.ModuleType("fake_config")
+        config.SCALE = 2.0
+        fn = eval("lambda a: a * config.SCALE", {"config": config})
+        fp2 = compute_fingerprint(fn)
+        assert compute_fingerprint(fn) == fp2
+        config.SCALE = 3.0
+        assert compute_fingerprint(fn) != fp2
+
+    def test_module_and_class_references_are_stable(self):
+        """np-style module/class references fingerprint by name — no forced
+        miss, no recursion into module dicts."""
+
+        import numpy as np
+
+        from repro.compile import compute_fingerprint
+
+        fn = eval("lambda a: np.float64(a)", {"np": np})
+        assert compute_fingerprint(fn) == compute_fingerprint(fn)
+
+    def test_recursive_global_reference_terminates(self):
+        ns = {}
+        exec("def f(x):\n    return f(x - 1) if x > 0 else x", ns)
+        from repro.compile import compute_fingerprint
+
+        assert compute_fingerprint(ns["f"])  # no RecursionError
+
+    def test_bound_method_receiver_state_changes_key(self):
+        from repro.compile import compute_fingerprint
+
+        class Scaler:
+            def __init__(self, k):
+                self.k = k
+
+            def scale(self, x):
+                return x * self.k
+
+        assert compute_fingerprint(Scaler(2).scale) == compute_fingerprint(
+            Scaler(2).scale
+        )
+        assert compute_fingerprint(Scaler(2).scale) != compute_fingerprint(
+            Scaler(3).scale
+        )
+
+    def test_partial_function_binding_changes_key(self):
+        import functools
+
+        from repro.compile import compute_fingerprint
+
+        def apply(f, x):
+            return f(x)
+
+        double = lambda v: v * 2  # noqa: E731
+        triple = lambda v: v * 3  # noqa: E731
+        assert compute_fingerprint(
+            functools.partial(apply, double)
+        ) != compute_fingerprint(functools.partial(apply, triple))
+
+    def test_set_element_state_changes_key(self):
+        from repro.compile import compute_fingerprint
+
+        class Tagged:
+            def __init__(self, k):
+                self.k = k
+
+            def __repr__(self):
+                return "Tagged"  # state-free repr: must not collide
+
+            def __hash__(self):
+                return 0
+
+            def __eq__(self, other):
+                return self is other
+
+        mk = lambda s: eval("lambda a: a + len(s)", {"s": s})  # noqa: E731
+        f2 = mk(frozenset({Tagged(2)}))
+        f3 = mk(frozenset({Tagged(3)}))
+        assert compute_fingerprint(f2) != compute_fingerprint(f3)
+
+    def test_cyclic_captured_container_terminates(self):
+        from repro.compile import compute_fingerprint
+
+        d = {}
+        d["self"] = d
+        fn = eval("lambda a: a + (d and 1)", {"d": d})
+        fp = compute_fingerprint(fn)  # no RecursionError
+        assert fp == compute_fingerprint(fn)
+
+    def test_numpy_ufunc_compute_keys_stably(self):
+        """np.abs-style ufuncs must fingerprint stably (a forced miss per
+        call would silently defeat the structural cache for every
+        numpy-using compute fn)."""
+
+        import numpy as np
+
+        from repro.compile import compute_fingerprint
+
+        f1 = eval("lambda a: np.abs(a)", {"np": np})
+        f2 = eval("lambda a: np.abs(a)", {"np": np})
+        assert compute_fingerprint(f1) == compute_fingerprint(f2)
+        g = eval("lambda a: np.exp(a)", {"np": np})
+        assert compute_fingerprint(f1) != compute_fingerprint(g)
+
+    def test_guard_changes_key(self):
+        base = LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("p", 0), (ArrayRef("p", -1),)),
+                Statement("S2", ArrayRef("a", 0), (ArrayRef("a", -1),)),
+            ),
+            bounds=((1, 6),),
+        )
+        guarded = LoopProgram(
+            statements=(
+                base.statements[0],
+                dataclasses.replace(
+                    base.statements[1], guard=ArrayRef("p", -1)
+                ),
+            ),
+            bounds=base.bounds,
+        )
+        assert key_of(base) != key_of(guarded)
+
+    def test_processor_map_changes_key(self):
+        from repro.kernels.pipelined_matmul.schedule import (
+            kloop_dependences,
+            make_kloop_program,
+        )
+
+        prog = make_kloop_program(8)
+        deps = kloop_dependences(2)
+        k1 = structural_key(
+            prog, deps, "procmap",
+            {"ISSUE": "mxu", "COMPUTE": "mxu", "LOAD": "dma"},
+        )
+        k2 = structural_key(
+            prog, deps, "procmap",
+            {"ISSUE": "dma", "COMPUTE": "mxu", "LOAD": "dma"},
+        )
+        assert k1 != k2
+
+
+class TestEndToEndNoFalseHits:
+    """The cache itself honors the key: bounds-only changes share an
+    artifact, compute-code changes do not (wrong-code reuse would be
+    silent)."""
+
+    def test_code_change_gets_fresh_artifact(self):
+        from repro.compile import CompileCache, run_xla
+        from repro.core import insert_synchronization, run_sequential
+
+        cache = CompileCache()
+
+        def prog_with(compute):
+            return LoopProgram(
+                statements=(
+                    Statement(
+                        "S1", ArrayRef("a", 0), (ArrayRef("a", -1),),
+                        compute=compute,
+                    ),
+                ),
+                bounds=((1, 6),),
+            )
+
+        doubler = prog_with(lambda r: r * 2.0)
+        halver = prog_with(lambda r: r / 2.0)
+        for prog in (doubler, halver):
+            sync = insert_synchronization(prog, analyze(prog))
+            init = prog.initial_store()
+            r = run_xla(sync, store=init, cache=cache, compare=False)
+            assert r.store == run_sequential(prog, init)
+        assert cache.stats.misses == 2 and cache.stats.hits == 0

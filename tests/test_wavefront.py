@@ -133,6 +133,9 @@ class TestDifferentialEquivalence:
         )
 
     def test_results_keyed_by_backend(self):
+        """Every *registered* backend shows up in the matrix — including the
+        xla backend, with zero per-test changes (the registry contract)."""
+
         res = run_all_backends(paper_alg6(5), methods=("isd",))
         assert set(res) == {
             "sequential",
@@ -140,6 +143,8 @@ class TestDifferentialEquivalence:
             "threaded/isd/optimized",
             "wavefront/isd/naive",
             "wavefront/isd/optimized",
+            "xla/isd/naive",
+            "xla/isd/optimized",
         }
 
 
