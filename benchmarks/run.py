@@ -4,6 +4,14 @@ framework-integration benches.  Prints ``name,us_per_call,derived`` CSV;
 ``{name: {"us_per_call": float, "derived": str}}`` (uploaded as a CI
 artifact, the perf-trajectory data points).
 
+Regression gate: ``--check-baseline`` compares this run's key benches
+(:data:`KEY_BENCHES`) against the committed record
+``benchmarks/BASELINE.json`` and exits non-zero when any ``us_per_call``
+regresses by more than :data:`REGRESSION_TOLERANCE` after normalizing out
+absolute runner speed against :data:`CALIBRATION_BENCHES` (CI fails the
+build).  After an intentional perf change, refresh the record with
+``python benchmarks/run.py --update-baseline`` and commit the diff.
+
 Paper benches (the paper's "results" are its didactic examples, so each
 bench reproduces one and reports the paper's implied metric — synchronization
 operations before/after optimization — plus wall time of the transformation
@@ -27,6 +35,13 @@ Compile-cache benches (the repro.compile subsystem):
   xla_vs_wavefront_alg6_1024  warm jitted XLA level loop vs NumPy wavefront
   compile_cache_cold_warm     cold (analyze+lower+jit) vs warm (cache hit)
   kloop_structural_cache      K-loop re-plans across steps: structural hits
+
+Cyclic-dependence benches (the SCC-condensed hybrid, repro.core.scc):
+
+  cyclic_recurrence_1024      mixed-sign (1,-1) recurrence @ 1024 iterations:
+                              chunked-DOACROSS hybrid vs the threaded machine
+  scc_hybrid_pipeline         recurrence SCC + DOALL consumer: cross-SCC
+                              pipelining depth vs blocked execution
 """
 
 from __future__ import annotations
@@ -306,6 +321,91 @@ def bench_kloop_structural_cache() -> None:
     )
 
 
+def _skew_recurrence_program(ni: int, nj: int):
+    from repro.core import ArrayRef, LoopProgram, Statement
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def bench_cyclic_recurrence() -> None:
+    """Acceptance bench for the SCC hybrid: a mixed-sign (1,-1) skewed
+    recurrence over 1024 iterations — rejected outright by the fast
+    backends before repro.core.scc existed — now a chunked DOACROSS that
+    must beat the one-thread-per-iteration machine ≥ 5×.  Also reports the
+    warm XLA nested-fori_loop form of the same schedule."""
+
+    from repro.compile import run_xla
+    from repro.core import parallelize, run_threaded, run_wavefront
+
+    prog = _skew_recurrence_program(64, 16)  # 1024 iterations, chunk 15
+    rep = parallelize(prog, method="isd", backend="wavefront")
+    (rec,) = rep.wavefront.scc.recurrences
+    t0 = time.perf_counter()
+    run_threaded(rep.optimized_sync, compare=False, timeout=180.0)
+    t_threaded = time.perf_counter() - t0
+    hybrid_us = _best_of(
+        lambda: run_wavefront(
+            rep.optimized_sync, schedule=rep.wavefront, compare=False
+        ),
+        n=5,
+    )
+    run_xla(rep.optimized_sync, schedule=rep.wavefront, compare=False)  # warm
+    xla_us = _best_of(
+        lambda: run_xla(
+            rep.optimized_sync, schedule=rep.wavefront, compare=False
+        ),
+        n=5,
+    )
+    speedup = t_threaded * 1e6 / hybrid_us
+    _row(
+        "cyclic_recurrence_1024",
+        hybrid_us,
+        f"threaded_ms={t_threaded*1e3:.1f} hybrid_us={hybrid_us:.0f} "
+        f"xla_us={xla_us:.0f} speedup={speedup:.1f}x "
+        f"chunk={rec.chunk} depth={rep.wavefront.depth} "
+        f"meets_5x={speedup >= 5.0}",
+    )
+
+
+def bench_scc_hybrid_pipeline() -> None:
+    """Recurrence SCC feeding a DOALL consumer: the consumer's batches level
+    right behind each producer chunk (depth ≈ chunks + 2), instead of the
+    blocked 2×chunks a run-SCCs-to-completion scheduler would produce."""
+
+    from repro.core import ArrayRef, LoopProgram, Statement, parallelize, run_wavefront
+
+    prog = LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (0, 0)),)),
+        ),
+        bounds=((0, 64), (0, 17)),
+    )
+    rep = parallelize(prog, method="isd", backend="wavefront")
+    us = _best_of(
+        lambda: run_wavefront(
+            rep.optimized_sync, schedule=rep.wavefront, compare=False
+        ),
+        n=5,
+    )
+    wf = rep.wavefront
+    (rec,) = wf.scc.recurrences
+    total = 64 * 17
+    n_chunks = -(-total // rec.chunk)
+    _row(
+        "scc_hybrid_pipeline",
+        us,
+        f"depth={wf.depth} chunks={n_chunks} chunk={rec.chunk} "
+        f"pipelined={wf.depth <= n_chunks + 2} "
+        f"blocked_depth_would_be={2 * n_chunks}",
+    )
+
+
 def bench_executor_sync_ops() -> None:
     from repro.core import parallelize, paper_alg6, run_threaded
 
@@ -438,11 +538,111 @@ BENCHES = [
     bench_xla_vs_wavefront,
     bench_compile_cache_cold_warm,
     bench_kloop_structural_cache,
+    bench_cyclic_recurrence,
+    bench_scc_hybrid_pipeline,
     bench_pp_schedule,
     bench_kernel_pipeline,
     bench_grad_sync_batching,
     bench_roofline_summary,
 ]
+
+# ---------------------------------------------------------------------- #
+# Baseline regression gate (CI)
+# ---------------------------------------------------------------------- #
+
+# the benches whose us_per_call CI refuses to let regress
+KEY_BENCHES = (
+    "wavefront_speedup_alg6_1024",
+    "xla_vs_wavefront_alg6_1024",
+    "cyclic_recurrence_1024",
+    "scc_hybrid_pipeline",
+)
+# >30% slower than the committed baseline (after runner-speed
+# normalization) fails the build
+REGRESSION_TOLERANCE = 1.30
+# Stable, CPU-bound, non-key transformation benches used to normalize out
+# absolute machine speed: the baseline is recorded on one machine and
+# checked on another (CI runner), so each key bench is judged on
+# (current/baseline) ÷ geomean(current/baseline over these).  A code change
+# that slows ONLY a key path still trips the gate; a uniformly slower
+# runner cancels out.  The calibration factor is clamped so a degenerate
+# measurement can't silently mask a real regression.
+CALIBRATION_BENCHES = (
+    "fission_alg1",
+    "sync_insertion_alg4",
+    "elim_tr_alg6",
+    "elim_pattern_alg6",
+)
+CALIBRATION_CLAMP = (0.25, 4.0)
+DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent / "BASELINE.json"
+
+
+def _runner_speed(record: Dict[str, dict], base: Dict[str, dict]) -> float:
+    """Geometric-mean current/baseline ratio over the calibration benches."""
+
+    import math
+
+    ratios = []
+    for name in CALIBRATION_BENCHES:
+        if name in record and name in base:
+            cur = float(record[name]["us_per_call"])
+            ref = float(base[name]["us_per_call"])
+            if cur > 0 and ref > 0:
+                ratios.append(cur / ref)
+    if not ratios:
+        return 1.0
+    g = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    lo, hi = CALIBRATION_CLAMP
+    return min(max(g, lo), hi)
+
+
+def check_baseline(record: Dict[str, dict], baseline_path: pathlib.Path) -> int:
+    """Compare ``record`` against the committed baseline; returns the number
+    of key-bench regressions (0 = pass) after printing a verdict table."""
+
+    if not baseline_path.exists():
+        print(
+            f"baseline {baseline_path} missing — run with --update-baseline "
+            "and commit it",
+            file=sys.stderr,
+        )
+        return 1
+    base = json.loads(baseline_path.read_text())
+    speed = _runner_speed(record, base)
+    print(
+        f"REGRESSION-GATE runner-speed calibration: {speed:.2f}x "
+        f"(geomean over {len(CALIBRATION_BENCHES)} non-key benches)",
+        file=sys.stderr,
+    )
+    failures = 0
+    for name in KEY_BENCHES:
+        if name not in base:
+            print(
+                f"REGRESSION-GATE {name}: not in baseline — refresh with "
+                "--update-baseline",
+                file=sys.stderr,
+            )
+            failures += 1
+            continue
+        if name not in record:
+            print(
+                f"REGRESSION-GATE {name}: bench did not run", file=sys.stderr
+            )
+            failures += 1
+            continue
+        cur = float(record[name]["us_per_call"])
+        ref = float(base[name]["us_per_call"])
+        ratio = (cur / ref) / speed if ref > 0 else 1.0
+        verdict = "OK" if ratio <= REGRESSION_TOLERANCE else "REGRESSED"
+        print(
+            f"REGRESSION-GATE {name}: baseline={ref:.1f}us "
+            f"current={cur:.1f}us normalized_ratio={ratio:.2f}x "
+            f"(limit {REGRESSION_TOLERANCE:.2f}x) {verdict}",
+            file=sys.stderr,
+        )
+        if verdict != "OK":
+            failures += 1
+    return failures
 
 
 def main(argv: List[str] | None = None) -> None:
@@ -455,21 +655,46 @@ def main(argv: List[str] | None = None) -> None:
         default=None,
         help="also write {name: {us_per_call, derived}} to PATH",
     )
+    ap.add_argument(
+        "--baseline",
+        metavar="PATH",
+        default=str(DEFAULT_BASELINE),
+        help="committed baseline record (default: benchmarks/BASELINE.json)",
+    )
+    ap.add_argument(
+        "--check-baseline",
+        action="store_true",
+        help=f"fail (exit 1) if any of {', '.join(KEY_BENCHES)} is more than "
+        f"{REGRESSION_TOLERANCE:.0%} of its baseline us_per_call",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="write this run's record to --baseline (the escape hatch after "
+        "an intentional perf change; commit the refreshed file)",
+    )
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     for bench in BENCHES:
         bench()
-    if args.json:
-        record = {
-            str(r["name"]): {
-                "us_per_call": r["us_per_call"],
-                "derived": r["derived"],
-            }
-            for r in ROWS
+    record = {
+        str(r["name"]): {
+            "us_per_call": r["us_per_call"],
+            "derived": r["derived"],
         }
+        for r in ROWS
+    }
+    if args.json:
         pathlib.Path(args.json).write_text(json.dumps(record, indent=2))
         print(f"wrote {len(record)} benches to {args.json}", file=sys.stderr)
+    if args.update_baseline:
+        pathlib.Path(args.baseline).write_text(json.dumps(record, indent=2))
+        print(f"updated baseline {args.baseline}", file=sys.stderr)
+    if args.check_baseline:
+        failures = check_baseline(record, pathlib.Path(args.baseline))
+        if failures:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -92,6 +92,7 @@ class CompileCache:
         *,
         model: str = "doall",
         processors: Optional[Dict[str, object]] = None,
+        chunk_limit: Optional[int] = None,
     ) -> Tuple["CompiledProgram", bool]:
         """Resolve (or build) the artifact for this structure.
 
@@ -103,7 +104,7 @@ class CompileCache:
 
         from repro.compile.lowering import CompiledProgram
 
-        key = structural_key(program, retained, model, processors)
+        key = structural_key(program, retained, model, processors, chunk_limit)
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -111,7 +112,12 @@ class CompileCache:
                 self.stats.note(True)
                 return entry, True
         built = CompiledProgram(
-            key, program, retained, model=model, processors=processors
+            key,
+            program,
+            retained,
+            model=model,
+            processors=processors,
+            chunk_limit=chunk_limit,
         )
         built.cache = self
         with self._lock:
@@ -133,11 +139,16 @@ def get_or_compile(
     *,
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
+    chunk_limit: Optional[int] = None,
 ) -> Tuple["CompiledProgram", bool]:
     """Module-level convenience over the process-global cache."""
 
     return GLOBAL_CACHE.get_or_compile(
-        program, retained, model=model, processors=processors
+        program,
+        retained,
+        model=model,
+        processors=processors,
+        chunk_limit=chunk_limit,
     )
 
 

@@ -46,6 +46,7 @@ def run_xla(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     cache: Optional[CompileCache] = None,
+    chunk_limit: Optional[int] = None,
 ) -> XlaReport:
     """Execute ``sync`` through the structural compile cache.
 
@@ -65,10 +66,16 @@ def run_xla(
         model = schedule.model
         if processors is None:
             processors = schedule.processors
+        if chunk_limit is None:
+            chunk_limit = schedule.chunk_limit
     else:
         retained = tuple(_sync_dependences(sync))
     compiled, hit = cache.get_or_compile(
-        prog, retained, model=model, processors=processors
+        prog,
+        retained,
+        model=model,
+        processors=processors,
+        chunk_limit=chunk_limit,
     )
 
     init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}

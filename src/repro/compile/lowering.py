@@ -25,6 +25,17 @@ power-of-two buckets, one traced artifact serves any iteration count whose
 bucketed shapes coincide; jax's own jit cache handles per-shape
 specialization below the structural cache (:mod:`repro.compile.cache`).
 
+Hybrid (SCC-condensed) schedules add one more structure: a cyclic SCC's
+chunked DOACROSS block appears as a *recurrence band* — a run of consecutive
+levels whose active groups are the same statements at consecutive table rows.
+Those bands lower to a nested ``lax.fori_loop`` over chunks with the store
+(the recurrence carry) in the loop state: no per-level ``lax.cond`` dispatch,
+no cursor bookkeeping, only the band's statements in the loop body.  Levels
+outside any band keep the generic cursor machinery, so pipelined schedules
+that interleave a recurrence with downstream acyclic levels still compile.
+Schedules without recurrence SCCs take the exact pre-hybrid trace (a single
+level loop over a traced level count, shared across bounds).
+
 Everything runs in ``float64`` (via :func:`jax.experimental.enable_x64`), so
 stores are bit-equal to :func:`repro.core.ir.run_sequential` — the same
 contract the other executors are held to by ``tests/oracle.py``.
@@ -231,6 +242,13 @@ class _StmtStatic:
 @dataclasses.dataclass(frozen=True)
 class _CaseStatic:
     stmts: Tuple[_StmtStatic, ...]
+    # segmented level loop (hybrid schedules with recurrence SCCs only):
+    #   ("wave", lo, hi, cursors0)      — generic dispatcher over [lo, hi)
+    #   ("rec",  n, ((k, row0), ...))   — nested fori_loop over n chunks;
+    #                                     statement k runs row0 + t at step t
+    # None → the single traced-bound level loop (pre-hybrid trace, shared
+    # across bounds with equal bucketed shapes)
+    segments: Optional[Tuple[Tuple, ...]] = None
 
 
 @dataclasses.dataclass
@@ -279,6 +297,7 @@ class CompiledProgram:
         retained: Sequence[Dependence],
         model: str = "doall",
         processors: Optional[Dict[str, object]] = None,
+        chunk_limit: Optional[int] = None,
     ) -> None:
         import collections
         import threading
@@ -290,6 +309,7 @@ class CompiledProgram:
         self.retained = tuple(retained)
         self.model = model
         self.processors = dict(processors) if processors else None
+        self.chunk_limit = chunk_limit
         self.cache = None  # back-reference set by the owning CompileCache
         self._cases: "collections.OrderedDict[Tuple, PreparedCase]" = (
             collections.OrderedDict()
@@ -405,6 +425,7 @@ class CompiledProgram:
             list(self.retained),
             model=self.model,
             processors=self.processors,
+            chunk_limit=self.chunk_limit,
         )
         n_levels = sched.depth
         arrays = tuple(sorted(dense.data))
@@ -520,8 +541,16 @@ class CompiledProgram:
                 table["oob"] = oob
             tables.append(table)
 
+        segments = None
+        if sched.scc is not None and sched.scc.recurrences:
+            segments = self._segment_levels(
+                program, sched, n_levels, len(program.statements)
+            )
+
         return PreparedCase(
-            static=_CaseStatic(stmts=tuple(stmt_statics)),
+            static=_CaseStatic(
+                stmts=tuple(stmt_statics), segments=segments
+            ),
             n_levels=n_levels,
             tables=tuple(tables),
             arrays=arrays,
@@ -532,6 +561,75 @@ class CompiledProgram:
             sparse=sparse,
             schedule=sched,
         )
+
+    # Minimum run of uniform levels worth collapsing into a nested loop —
+    # below this the generic dispatcher's per-level cost doesn't matter.
+    REC_BAND_MIN = 4
+
+    @staticmethod
+    def _segment_levels(
+        program: LoopProgram, sched, n_levels: int, n_stmts: int
+    ) -> Tuple[Tuple, ...]:
+        """Partition the level sequence into wave segments + recurrence bands.
+
+        A band is a maximal run of ≥ :attr:`REC_BAND_MIN` levels whose
+        active (statement, table-row) pairs advance in lockstep — exactly
+        what a chunked recurrence (plus any acyclic groups pipelined against
+        it) produces.  Sound regardless of which statements land in a band:
+        same-level groups of different scheduling units are independent by
+        construction, and the band executes them in lexical order like the
+        generic dispatcher.
+        """
+
+        import bisect
+
+        stmt_index = {s.name: k for k, s in enumerate(program.statements)}
+        level_active: List[List[Tuple[int, int]]] = [
+            [] for _ in range(n_levels)
+        ]
+        rows_seen = [0] * n_stmts
+        stmt_levels: List[List[int]] = [[] for _ in range(n_stmts)]
+        for lvl, groups in enumerate(sched.levels):
+            for g in groups:
+                k = stmt_index[g.statement]
+                level_active[lvl].append((k, rows_seen[k]))
+                stmt_levels[k].append(lvl)
+                rows_seen[k] += 1
+        for active in level_active:
+            active.sort()  # lexical statement order (groups already are)
+
+        def cursors_at(level: int) -> Tuple[int, ...]:
+            return tuple(
+                bisect.bisect_left(stmt_levels[k], level)
+                for k in range(n_stmts)
+            )
+
+        segments: List[Tuple] = []
+        wave_start = 0
+        L = 0
+        while L < n_levels:
+            base = level_active[L]
+            run = 1
+            while L + run < n_levels and len(level_active[L + run]) == len(
+                base
+            ) and all(
+                nk == bk and nr == br + run
+                for (nk, nr), (bk, br) in zip(level_active[L + run], base)
+            ):
+                run += 1
+            if base and run >= CompiledProgram.REC_BAND_MIN:
+                if wave_start < L:
+                    segments.append(
+                        ("wave", wave_start, L, cursors_at(wave_start))
+                    )
+                segments.append(("rec", run, tuple(base)))
+                wave_start = L + run
+            L += run
+        if wave_start < n_levels:
+            segments.append(
+                ("wave", wave_start, n_levels, cursors_at(wave_start))
+            )
+        return tuple(segments)
 
     # ------------------------------------------------------------------ #
     # The traced executable
@@ -546,63 +644,69 @@ class CompiledProgram:
 
         K = len(static.stmts)
 
-        def body(level, carry):
+        def group_step(k, ss, c, store, coverage, bad, gate=None):
+            """Vectorized gather/compute/scatter of statement ``k``'s table
+            row ``c``; returns (new write array, new coverage, bad flags).
+            Read-only arrays are captured by closure — routing the whole
+            store through here would force XLA to copy every array."""
+
+            t = tables[k]
+
+            def row(m):
+                return lax.dynamic_index_in_dim(m, c, axis=0, keepdims=False)
+
+            lanes = row(t["lanemask"])
+            if gate is not None:  # condless path: fold the active
+                lanes = lanes & gate  # bit into the lane mask
+            ridx = [row(ix) for ix in t["ridx"]]
+            mask = lanes
+            if ss.guard is not None:
+                gix = row(t["gidx"])
+                if ss.cov_guard:
+                    bad = bad.at[1].set(
+                        bad[1] | jnp.any(lanes & ~coverage[ss.guard][gix])
+                    )
+                mask = mask & (store[ss.guard][gix] > 0.0)
+            for j, (a, ix) in enumerate(zip(ss.reads, ridx)):
+                if ss.cov_reads[j]:
+                    bad = bad.at[1].set(
+                        bad[1] | jnp.any(mask & ~coverage[a][ix])
+                    )
+            if ss.has_oob:
+                oob_row = row(t["oob"])
+                bad = bad.at[0].set(bad[0] | jnp.any(mask & oob_row))
+                mask = mask & ~oob_row
+            reads = [store[a][ix] for a, ix in zip(ss.reads, ridx)]
+            vals = self._batched[k](reads, lanes.shape[0], opaque_zero)
+            trash = store[ss.write].shape[0] - 1
+            tgt = jnp.where(mask, row(t["widx"]), trash)
+            new_write = store[ss.write].at[tgt].set(vals)
+            new_cov = (
+                coverage[ss.write].at[tgt].set(True) if ss.cov_write else ()
+            )
+            return (new_write, new_cov, bad)
+
+        def level_body(level, carry):
+            """Generic dispatcher: per-statement cursors + lax.cond."""
+
             store, coverage, cursors, bad = carry
             for k, ss in enumerate(static.stmts):
-                t = tables[k]
                 c = cursors[k]
                 active = (
                     lax.dynamic_index_in_dim(
-                        t["glevel"], c, axis=0, keepdims=False
+                        tables[k]["glevel"], c, axis=0, keepdims=False
                     )
                     == level
                 )
 
-                # The cond returns only what the group writes (one array,
-                # optionally its coverage, the flags) — routing the whole
-                # store through it would force XLA to copy every array at
-                # every level; read-only arrays are captured by closure.
-                def run_group(gate=None, t=t, k=k, ss=ss, c=c, bad=bad):
-                    def row(m):
-                        return lax.dynamic_index_in_dim(
-                            m, c, axis=0, keepdims=False
-                        )
+                # the cond returns only what the group writes (one array,
+                # optionally its coverage, the flags)
+                def run_group(k=k, ss=ss, c=c, bad=bad, store=store,
+                              coverage=coverage):
+                    return group_step(k, ss, c, store, coverage, bad)
 
-                    lanes = row(t["lanemask"])
-                    if gate is not None:  # condless path: fold the active
-                        lanes = lanes & gate  # bit into the lane mask
-                    ridx = [row(ix) for ix in t["ridx"]]
-                    mask = lanes
-                    if ss.guard is not None:
-                        gix = row(t["gidx"])
-                        if ss.cov_guard:
-                            bad = bad.at[1].set(
-                                bad[1]
-                                | jnp.any(lanes & ~coverage[ss.guard][gix])
-                            )
-                        mask = mask & (store[ss.guard][gix] > 0.0)
-                    for j, (a, ix) in enumerate(zip(ss.reads, ridx)):
-                        if ss.cov_reads[j]:
-                            bad = bad.at[1].set(
-                                bad[1] | jnp.any(mask & ~coverage[a][ix])
-                            )
-                    if ss.has_oob:
-                        oob_row = row(t["oob"])
-                        bad = bad.at[0].set(bad[0] | jnp.any(mask & oob_row))
-                        mask = mask & ~oob_row
-                    reads = [store[a][ix] for a, ix in zip(ss.reads, ridx)]
-                    vals = self._batched[k](reads, lanes.shape[0], opaque_zero)
-                    trash = store[ss.write].shape[0] - 1
-                    tgt = jnp.where(mask, row(t["widx"]), trash)
-                    new_write = store[ss.write].at[tgt].set(vals)
-                    new_cov = (
-                        coverage[ss.write].at[tgt].set(True)
-                        if ss.cov_write
-                        else ()
-                    )
-                    return (new_write, new_cov, bad)
-
-                def skip_group(ss=ss, bad=bad):
+                def skip_group(ss=ss, bad=bad, store=store,
+                               coverage=coverage):
                     return (
                         store[ss.write],
                         coverage[ss.write] if ss.cov_write else (),
@@ -614,7 +718,9 @@ class CompiledProgram:
                         active, run_group, skip_group
                     )
                 else:
-                    new_write, new_cov, bad = run_group(gate=active)
+                    new_write, new_cov, bad = group_step(
+                        k, ss, c, store, coverage, bad, gate=active
+                    )
                 store = dict(store)
                 store[ss.write] = new_write
                 if ss.cov_write:
@@ -623,12 +729,54 @@ class CompiledProgram:
                 cursors = cursors.at[k].add(active.astype(jnp.int32))
             return (store, coverage, cursors, bad)
 
-        store, coverage, _, bad = lax.fori_loop(
-            0,
-            n_levels,
-            body,
-            (store, coverage, jnp.zeros((K,), jnp.int32), bad),
-        )
+        if static.segments is None:
+            store, coverage, _, bad = lax.fori_loop(
+                0,
+                n_levels,
+                level_body,
+                (store, coverage, jnp.zeros((K,), jnp.int32), bad),
+            )
+            return store, coverage, bad
+
+        # Segmented form (hybrid schedules with recurrence SCCs): wave
+        # segments keep the generic dispatcher; each recurrence band is its
+        # own nested fori_loop with the store as the recurrence carry and
+        # statically known (statement, row) progressions — no cursors, no
+        # conds, only the band's statements in the body.
+        for seg in static.segments:
+            if seg[0] == "wave":
+                _tag, lo, hi, cursors0 = seg
+                store, coverage, _, bad = lax.fori_loop(
+                    lo,
+                    hi,
+                    level_body,
+                    (
+                        store,
+                        coverage,
+                        jnp.asarray(cursors0, jnp.int32),
+                        bad,
+                    ),
+                )
+            else:
+                _tag, n_chunks, pairs = seg
+
+                def rec_body(t, carry, pairs=pairs):
+                    store, coverage, bad = carry
+                    for k, row0 in pairs:  # lexical statement order
+                        ss = static.stmts[k]
+                        new_write, new_cov, bad = group_step(
+                            k, ss, row0 + t, store, coverage, bad
+                        )
+                        store = dict(store)
+                        store[ss.write] = new_write
+                        if ss.cov_write:
+                            coverage = dict(coverage)
+                            coverage[ss.write] = new_cov
+                    return (store, coverage, bad)
+
+                store, coverage, bad = lax.fori_loop(
+                    0, n_chunks, rec_body, (store, coverage, bad)
+                )
         return store, coverage, bad
 
     # ------------------------------------------------------------------ #

@@ -11,7 +11,12 @@ specializes on and nothing else:
     read / guard accesses (array name + constant offset vector), and a
     *behavioral* fingerprint of each compute function;
   * the retained (synchronized) dependences, as an order-insensitive set;
-  * the execution model (``doall`` / ``dswp`` / ``procmap`` + processor map).
+  * the execution model (``doall`` / ``dswp`` / ``procmap`` + processor map);
+  * the SCC partition of the statement graph (:func:`repro.core.scc_signature`
+    — membership + recurrence flags, bounds-free) and the DOACROSS
+    ``chunk_limit`` knob, so two artifacts that condense or chunk the same
+    graph differently can never alias.  Chunk *sizes* are linearized against
+    concrete bounds and live in the per-bounds table cache below.
 
 Deliberately **excluded**: the loop bounds.  Two requests that differ only in
 iteration count share a key (the per-bounds level tables are a second-level
@@ -312,9 +317,13 @@ def structural_key(
     retained: Sequence[Dependence],
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
+    chunk_limit: Optional[int] = None,
 ) -> str:
     """The compile-cache key: hash of (statement graph, retained dependence
-    set, execution model).  Loop bounds do not participate."""
+    set, execution model, SCC partition, chunk knob).  Loop bounds do not
+    participate."""
+
+    from repro.core.scc import scc_signature
 
     procs = (
         tuple(sorted((k, repr(v)) for k, v in processors.items()))
@@ -327,5 +336,7 @@ def structural_key(
             dependence_signature(retained),
             model,
             procs,
+            scc_signature(prog, retained, model, processors),
+            chunk_limit,
         )
     )

@@ -37,6 +37,15 @@ from repro.core.schedule import (
     StageGraph,
     plan_pipeline_sync,
 )
+from repro.core.scc import (
+    SccInfo,
+    SccPartition,
+    analyze_sccs,
+    hybrid_levels,
+    scc_signature,
+    tarjan_sccs,
+    validate_retained,
+)
 from repro.core.sync import (
     Send,
     SyncProgram,
@@ -65,6 +74,8 @@ __all__ = [
     "LoopProgram",
     "ParallelizationReport",
     "PipelineSyncPlan",
+    "SccInfo",
+    "SccPartition",
     "Send",
     "StageGraph",
     "Statement",
@@ -74,6 +85,7 @@ __all__ = [
     "WavefrontSchedule",
     "analysis_cache_stats",
     "analyze",
+    "analyze_sccs",
     "build_isd",
     "clear_analysis_cache",
     "execution_backends",
@@ -81,6 +93,7 @@ __all__ = [
     "eliminate_pattern",
     "eliminate_transitive",
     "fission",
+    "hybrid_levels",
     "insert_synchronization",
     "isd_window",
     "loop_carried",
@@ -95,7 +108,10 @@ __all__ = [
     "run_sequential",
     "run_threaded",
     "run_wavefront",
+    "scc_signature",
     "schedule_wavefronts",
     "strip_dependences",
     "synchronized_set",
+    "tarjan_sccs",
+    "validate_retained",
 ]

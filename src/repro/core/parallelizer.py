@@ -43,6 +43,7 @@ from repro.core.elimination import (
 from repro.core.executor import run_threaded
 from repro.core.fission import FissionResult, fission
 from repro.core.ir import LoopProgram
+from repro.core.scc import validate_retained
 from repro.core.sync import SyncProgram, insert_synchronization, strip_dependences
 from repro.core.wavefront import (
     WavefrontSchedule,
@@ -265,6 +266,17 @@ class ParallelizationReport:
             "method": self.elimination.method,
             "backend": self.backend,
         }
+        if self.wavefront is not None and self.wavefront.scc is not None:
+            out["scc"] = self.wavefront.scc.summary()
+        else:
+            # statement-level only — cheap enough to surface on every
+            # backend (chunk sizes are bounds-linearized here too, since
+            # the report's program carries concrete bounds)
+            from repro.core.scc import analyze_sccs
+
+            out["scc"] = analyze_sccs(
+                self.program, self.elimination.retained
+            ).summary()
         if self.wavefront is not None:
             out["wavefront_depth"] = self.wavefront.depth
             out["wavefront_batched_ops"] = self.wavefront.batched_ops
@@ -306,6 +318,14 @@ def parallelize(
     naive = insert_synchronization(prog, dep_list, merge=False)
 
     elim = _memoized_eliminate(prog, dep_list, method)
+
+    # Genuinely unschedulable retained sets (lexicographically negative /
+    # backward-zero distances — a cyclic Δ-sign mix no machine can honor)
+    # fail HERE, at compile time, for every backend: the threaded machine
+    # would deadlock mid-execution and the schedulers would reject later
+    # with less context.  repro.core.scc raises with the offending SCC's
+    # statements and a witness cycle.
+    validate_retained(prog, elim.retained)
 
     optimized = strip_dependences(naive, elim.eliminated)
     if merge_sends:

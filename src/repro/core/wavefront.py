@@ -22,11 +22,17 @@ of the program is covered by a path of enforced-order edges, every enforced
 edge strictly increases the level, hence any two instances sharing a level
 are mutually independent and may execute in one batch, in any order.
 
-The layering is only defined when the enforced-order instance graph is
-acyclic.  Mixed-sign distance components (a Δ-sign mix such as retaining
-both ``(1, -1)`` and ``(-1, 1)`` edges) can close cycles through the
-iteration space; those are rejected with :class:`WavefrontError` carrying a
-diagnostic rather than silently mis-scheduling.
+The plain longest-path layering is only defined when retained distances are
+per-dimension non-negative (the ISD precondition).  Retained sets with
+mixed-sign distance components — skewed stencils, cross-iteration cycles
+with a Δ-sign mix — route through the SCC-condensed hybrid scheduler
+(:mod:`repro.core.scc`): Tarjan condensation of the statement graph, chunked
+DOACROSS execution for recurrence components, instance-level layering with
+cross-SCC pipelining for everything else.  Only dependence sets that
+contradict sequential execution order (lexicographically negative or
+backward zero distances — the send/wait machine would deadlock) still raise
+:class:`WavefrontError`, at schedule/parallelize time, naming the offending
+SCC's statements and a witness cycle.
 
 Four executors now coexist (see ROADMAP "Execution backends"):
 
@@ -52,11 +58,25 @@ import numpy as np
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram, run_sequential
 from repro.core.isd import Instance, build_isd
+from repro.core.scc import (
+    SccPartition,
+    WavefrontError,
+    analyze_sccs,
+    hybrid_levels,
+    validate_retained,
+)
 from repro.core.sync import SyncProgram
 
-
-class WavefrontError(ValueError):
-    """The enforced-order instance graph admits no wavefront layering."""
+__all__ = [
+    "WavefrontError",  # re-exported; defined beside the SCC machinery
+    "WavefrontGroup",
+    "WavefrontSchedule",
+    "WavefrontReport",
+    "WavefrontStats",
+    "run_wavefront",
+    "schedule_levels",
+    "schedule_wavefronts",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +103,13 @@ class WavefrontSchedule:
     # schedule is a complete lowering hand-off (repro.compile re-layers it
     # for other bounds under the same model)
     processors: Optional[Dict[str, object]] = None
+    # Tarjan condensation of the statement graph (repro.core.scc); carries
+    # the recurrence blocks' chunk sizes when the hybrid path was taken
+    scc: Optional[SccPartition] = None
+    # cap on DOACROSS chunk sizes this schedule was built with (the knob is
+    # part of the lowering hand-off: re-layering for other bounds must chunk
+    # under the same cap)
+    chunk_limit: Optional[int] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -117,7 +144,7 @@ class WavefrontSchedule:
         return out
 
     def summary(self) -> dict:
-        return {
+        out = {
             "depth": self.depth,
             "batched_ops": self.batched_ops,
             "instances": self.instances,
@@ -125,6 +152,9 @@ class WavefrontSchedule:
             "model": self.model,
             "retained": [d.pretty() for d in self.retained],
         }
+        if self.scc is not None:
+            out["scc"] = self.scc.summary()
+        return out
 
 
 def _sync_dependences(sync: SyncProgram) -> List[Dependence]:
@@ -147,19 +177,38 @@ def schedule_wavefronts(
     *,
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
+    chunk_limit: Optional[int] = None,
 ) -> WavefrontSchedule:
-    """Longest-path dependence-level layering over the ISD.
+    """Dependence-level layering of ``sync`` (hybrid when cycles demand it).
 
     ``retained`` defaults to the dependences ``sync`` synchronizes (its
     register table) — pass ``EliminationResult.retained`` explicitly when
     scheduling straight from a compiler report.  Raises
-    :class:`WavefrontError` when the layering does not exist (negative
-    distance components / cyclic Δ-sign mixes).
+    :class:`WavefrontError` only for retained sets that contradict
+    sequential execution order (see :func:`repro.core.scc.validate_retained`).
     """
 
     deps = list(retained) if retained is not None else _sync_dependences(sync)
     return schedule_levels(
-        sync.program, deps, model=model, processors=processors
+        sync.program,
+        deps,
+        model=model,
+        processors=processors,
+        chunk_limit=chunk_limit,
+    )
+
+
+def _levels_to_groups(
+    prog: LoopProgram,
+    raw: Sequence[Mapping[str, Sequence[Tuple[int, ...]]]],
+) -> Tuple[Tuple[WavefrontGroup, ...], ...]:
+    lex = {name: k for k, name in enumerate(prog.names)}
+    return tuple(
+        tuple(
+            WavefrontGroup(statement=name, iterations=tuple(its))
+            for name, its in sorted(groups.items(), key=lambda kv: lex[kv[0]])
+        )
+        for groups in raw
     )
 
 
@@ -169,26 +218,41 @@ def schedule_levels(
     *,
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
+    chunk_limit: Optional[int] = None,
 ) -> WavefrontSchedule:
     """Layer a bare :class:`LoopProgram` given its retained dependences.
 
     The sync-program-independent core of :func:`schedule_wavefronts`; used
     directly by the Pallas K-loop plan, whose enforced orders come from an
     explicit processor map rather than a send/wait program.
+
+    Per-dimension non-negative retained sets take the classic longest-path
+    ISD layering below; sets with mixed-sign distance components route
+    through the SCC-condensed hybrid (:func:`repro.core.scc.hybrid_levels`)
+    — acyclic components stay instance-layered (pipelined), recurrence
+    components become chunked DOACROSS blocks of at most ``chunk_limit``
+    iterations (default: the component's minimum carried distance).
     """
 
     deps = list(retained)
+    validate_retained(prog, deps)  # WavefrontError before any execution
 
-    negative = [d for d in deps if any(x < 0 for x in d.distance)]
-    if negative:
-        raise WavefrontError(
-            "wavefront layering conservatively requires per-dimension "
-            "non-negative dependence distances (the ISD precondition); "
-            "rejected: "
-            + "; ".join(d.pretty() for d in negative)
-            + " — mixed-sign distance vectors (a Δ-sign mix) can close "
-            "cycles through the iteration space; reformulate the loop "
-            "(reversal/skewing) so retained distances are non-negative"
+    if any(x < 0 for d in deps for x in d.distance):
+        raw, part = hybrid_levels(
+            prog,
+            deps,
+            model=model,
+            processors=processors,
+            chunk_limit=chunk_limit,
+        )
+        return WavefrontSchedule(
+            program=prog,
+            levels=_levels_to_groups(prog, raw),
+            model=model,
+            retained=tuple(deps),
+            processors=dict(processors) if processors else None,
+            scc=part,
+            chunk_limit=chunk_limit,
         )
 
     try:
@@ -229,26 +293,20 @@ def schedule_levels(
         )
 
     depth = max(level.values(), default=-1) + 1
-    lex = {name: k for k, name in enumerate(prog.names)}
     by_level: List[Dict[str, List[Tuple[int, ...]]]] = [
         {} for _ in range(depth)
     ]
     for it in prog.iterations():  # iteration order → sorted group members
         for s in prog.statements:
             by_level[level[(s.name, it)]].setdefault(s.name, []).append(it)
-    levels = tuple(
-        tuple(
-            WavefrontGroup(statement=name, iterations=tuple(its))
-            for name, its in sorted(groups.items(), key=lambda kv: lex[kv[0]])
-        )
-        for groups in by_level
-    )
     return WavefrontSchedule(
         program=prog,
-        levels=levels,
+        levels=_levels_to_groups(prog, by_level),
         model=model,
         retained=tuple(deps),
         processors=dict(processors) if processors else None,
+        scc=analyze_sccs(prog, deps, model=model, processors=processors),
+        chunk_limit=chunk_limit,
     )
 
 
@@ -385,6 +443,7 @@ def run_wavefront(
     compare: bool = True,
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
+    chunk_limit: Optional[int] = None,
 ) -> WavefrontReport:
     """Execute ``sync`` level by level, one vectorized op per group.
 
@@ -396,7 +455,7 @@ def run_wavefront(
     """
 
     sched = schedule or schedule_wavefronts(
-        sync, model=model, processors=processors
+        sync, model=model, processors=processors, chunk_limit=chunk_limit
     )
     prog = sync.program
     init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}

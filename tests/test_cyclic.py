@@ -1,0 +1,268 @@
+"""Differential coverage for cyclic / mixed-Δ programs across every
+registered backend.
+
+Until the SCC-condensed hybrid (repro.core.scc) existed, every program here
+except Alg. 4 was rejected by both fast backends with WavefrontError; now
+each runs through ``tests/oracle.py`` — sequential / threaded / wavefront /
+xla × naive / optimized synchronization — and must reproduce the sequential
+store bit for bit.
+
+The property section follows tests/test_strip_properties.py form: a
+seeded-random generator of cyclic 2-D programs that always runs, plus a
+hypothesis ``@given`` version (skipped without the ``test`` extra) drawing
+random cyclic graphs and asserting the SCC-hybrid schedules store-bit-equal
+to the oracle on both fast backends.
+"""
+
+import random
+
+import pytest
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+from oracle import assert_equivalent
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    analyze,
+    paper_alg4,
+    parallelize,
+    run_threaded,
+    run_wavefront,
+)
+
+ARRAYS = ["a", "b", "c", "d"]
+
+
+def skew_recurrence(ni=5, nj=5):
+    """a[i,j] = f(a[i-1,j+1]): mixed-sign (1,-1) self-recurrence; the hybrid
+    runs it as a chunked DOACROSS of width nj-1."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def mixed_cycle_pm1():
+    """The acceptance example: retained {Δ components +1, -1} closing a
+    statement cycle — S1 -> S2 with (0,1), S2 -> S1 with (1,-1)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 1)),)),
+            Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+        ),
+        bounds=((0, 4), (0, 4)),
+    )
+
+
+def skew_pipeline():
+    """Recurrence SCC + downstream DOALL consumer (cross-SCC pipelining)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (0, 0)),)),
+        ),
+        bounds=((0, 5), (0, 6)),
+    )
+
+
+def double_skew():
+    """Two carried mixed-sign deps with different linearized distances —
+    the chunk must follow the minimum."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (-1, 2)), ArrayRef("a", (-1, -1))),
+            ),
+        ),
+        bounds=((0, 5), (0, 6)),
+    )
+
+
+def guarded_recurrence():
+    """Mixed-sign recurrence under a data-dependent guard: the guard path
+    must survive the nested-fori_loop lowering too."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("p", (0, 0)), (ArrayRef("p", (-1, 1)),)),
+            Statement(
+                "S2",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (-1, 1)),),
+                guard=ArrayRef("p", (0, 0)),
+            ),
+        ),
+        bounds=((0, 4), (0, 5)),
+    )
+
+
+def producer_into_cycle():
+    """Acyclic producer feeding a two-statement mixed-sign cycle."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("d", (0, 0)), ()),
+            Statement(
+                "S2",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("b", (-1, 1)), ArrayRef("d", (0, 0))),
+            ),
+            Statement("S3", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+        ),
+        bounds=((0, 4), (0, 4)),
+    )
+
+
+CYCLIC_PROGRAMS = [
+    ("paper_alg4_cyclic_isd", paper_alg4(8)),
+    ("skew_recurrence", skew_recurrence()),
+    ("mixed_cycle_pm1", mixed_cycle_pm1()),
+    ("skew_pipeline", skew_pipeline()),
+    ("double_skew", double_skew()),
+    ("guarded_recurrence", guarded_recurrence()),
+    ("producer_into_cycle", producer_into_cycle()),
+]
+
+
+class TestCyclicDifferential:
+    @pytest.mark.parametrize(
+        "name,prog", CYCLIC_PROGRAMS, ids=[n for n, _ in CYCLIC_PROGRAMS]
+    )
+    def test_all_backends_bit_equal(self, name, prog):
+        assert_equivalent(prog)
+
+    def test_acceptance_example_on_both_fast_backends(self):
+        """ISSUE acceptance: a cyclic Δ-sign mix executes bit-equal to the
+        sequential oracle on backend="wavefront" AND backend="xla"."""
+
+        prog = mixed_cycle_pm1()
+        for backend in ("wavefront", "xla"):
+            rep = parallelize(prog, method="isd", backend=backend)
+            assert rep.summary()["scc"]["recurrences"], backend
+            if backend == "wavefront":
+                out = run_wavefront(rep.optimized_sync, schedule=rep.wavefront)
+            else:
+                from repro.compile import run_xla
+
+                out = run_xla(rep.optimized_sync, schedule=rep.wavefront)
+            assert out.matches_sequential, backend
+
+    def test_chunk_limit_knob_still_bit_equal(self):
+        prog = skew_recurrence(6, 9)
+        rep = parallelize(prog, method="isd")
+        for chunk_limit in (1, 2, 3):
+            out = run_wavefront(
+                rep.optimized_sync, chunk_limit=chunk_limit, compare=True
+            )
+            (rec,) = out.schedule.scc.recurrences
+            assert rec.chunk == chunk_limit
+            assert out.matches_sequential
+
+    def test_xla_structural_cache_covers_partition_and_knob(self):
+        """Same structure at different bounds is a structural hit; a
+        different chunk_limit is a miss (the key covers the knob)."""
+
+        from repro.compile import run_xla
+
+        r1 = run_xla(_sync(skew_recurrence(5, 5)), compare=False)
+        r2 = run_xla(_sync(skew_recurrence(9, 5)), compare=False)
+        assert r2.cache_events["structural"] == "hit"
+        r3 = run_xla(_sync(skew_recurrence(5, 5)), compare=False, chunk_limit=2)
+        assert r3.cache_events["structural"] == "miss"
+        assert r1.compiled is not r3.compiled
+
+
+def _sync(prog):
+    from repro.core import insert_synchronization
+
+    return insert_synchronization(prog, analyze(prog))
+
+
+# ---------------------------------------------------------------------- #
+# Random cyclic graphs: seeded (always runs) + hypothesis (test extra)
+# ---------------------------------------------------------------------- #
+
+def random_cyclic_program(seed: int) -> LoopProgram:
+    """Random 2-D loop nest biased toward mixed-sign carried dependences.
+
+    Read offsets draw di ∈ {-1, 0} and dj ∈ [-2, 2]; the analyzer orients
+    every conflicting pair into a lexicographically non-negative dependence,
+    so the retained set is always valid, and di=-1 with dj≥1 produces the
+    mixed-sign distances that force recurrence SCCs.
+    """
+
+    rng = random.Random(seed)
+    stmts = []
+    for k in range(rng.randint(1, 3)):
+        reads = tuple(
+            ArrayRef(
+                rng.choice(ARRAYS),
+                (-rng.randint(0, 1), rng.randint(-2, 2)),
+            )
+            for _ in range(rng.randint(1, 3))
+        )
+        stmts.append(
+            Statement(f"S{k+1}", ArrayRef(rng.choice(ARRAYS), (0, 0)), reads)
+        )
+    return LoopProgram(
+        statements=tuple(stmts),
+        bounds=((0, rng.randint(3, 4)), (0, rng.randint(3, 5))),
+    )
+
+
+class TestRandomCyclic:
+    @pytest.mark.parametrize("seed", range(20))
+    def test_seeded_hybrid_bit_equal_fast_backends(self, seed):
+        prog = random_cyclic_program(seed)
+        assert_equivalent(
+            prog,
+            methods=("none", "isd"),
+            threaded=False,
+            backends=("wavefront", "xla"),
+        )
+
+    @pytest.mark.parametrize("seed", (3, 7))
+    def test_seeded_threaded_included(self, seed):
+        assert_equivalent(random_cyclic_program(seed), methods=("isd",))
+
+    @given(st.integers(min_value=0, max_value=10**9))
+    @settings(
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_property_scc_hybrid_matches_oracle(self, seed):
+        prog = random_cyclic_program(seed)
+        rep = parallelize(prog, method="isd", backend="wavefront")
+        out = run_wavefront(rep.optimized_sync, schedule=rep.wavefront)
+        assert out.matches_sequential
+
+
+@pytest.mark.slow
+class TestCyclicSpeedup:
+    def test_hybrid_at_least_5x_faster_than_threads(self):
+        """Acceptance bar for cyclic_recurrence_1024: the chunked DOACROSS
+        beats the one-thread-per-iteration machine ≥ 5× on 1024 iterations."""
+
+        import time
+
+        prog = skew_recurrence(64, 16)  # 1024 iterations, chunk 15
+        rep = parallelize(prog, method="isd", backend="wavefront")
+        assert rep.summary()["scc"]["recurrences"]
+        run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False)
+        t0 = time.perf_counter()
+        run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False)
+        t_hybrid = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_threaded(rep.optimized_sync, compare=False, timeout=180.0)
+        t_threads = time.perf_counter() - t0
+        assert t_threads / t_hybrid >= 5.0

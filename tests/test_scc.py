@@ -1,0 +1,247 @@
+"""Unit tests for the SCC-condensed hybrid scheduler (repro.core.scc):
+Tarjan condensation, recurrence classification and chunk sizing, the
+unschedulability diagnostics (offending SCC + witness cycle, raised at
+parallelize() time), and the structural properties of hybrid schedules —
+every cross-unit enforced order strictly increases the level, recurrence
+chunks never exceed the minimum carried distance, and downstream acyclic
+SCCs pipeline against producer chunks instead of waiting for the whole
+recurrence.
+"""
+
+import pytest
+
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    WavefrontError,
+    analyze,
+    analyze_sccs,
+    paper_alg4,
+    paper_alg6,
+    parallelize,
+    scc_signature,
+    tarjan_sccs,
+    validate_retained,
+)
+from repro.core.dependence import FLOW, Dependence
+from repro.core.wavefront import schedule_levels
+
+
+def skew_stencil(ni=6, nj=5):
+    """a[i,j] = f(a[i-1,j+1]) — the classic mixed-sign (1,-1) recurrence."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def mixed_cycle(ni=4, nj=4):
+    """S1 -> S2 with Δ=(0,1) and S2 -> S1 with Δ=(1,-1): a retained
+    {Δ=+1, Δ=-1} component mix closing a statement cycle."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 1)),)),
+            Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def skew_pipeline(ni=8, nj=9):
+    """Recurrence SCC feeding an acyclic DOALL consumer."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (0, 0)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def carried(prog):
+    return [d for d in analyze(prog) if d.loop_carried]
+
+
+class TestTarjan:
+    def test_condensation_topological_order(self):
+        adj = {
+            "A": {"B"},
+            "B": {"C"},
+            "C": {"B", "D"},
+            "D": set(),
+            "E": {"A"},
+        }
+        comps = tarjan_sccs(["A", "B", "C", "D", "E"], adj)
+        assert sorted(map(sorted, comps)) == [["A"], ["B", "C"], ["D"], ["E"]]
+        order = {n: k for k, comp in enumerate(comps) for n in comp}
+        for u, succs in adj.items():
+            for v in succs:
+                assert order[u] <= order[v]
+
+    def test_alg4_statement_cycle_found(self):
+        """The paper's cyclic example: S1 δf(a,1) S3 δf(c,1) S2 δf(b,1) S1
+        closes a 3-cycle (via the dependence the paper's Fig. 5 misses)."""
+
+        prog = paper_alg4(8)
+        part = analyze_sccs(prog, carried(prog))
+        cyclic = [s for s in part.sccs if s.cyclic]
+        assert len(cyclic) == 1
+        assert set(cyclic[0].statements) == {"S1", "S2", "S3"}
+        # positive distances only: layerable, NOT a recurrence block
+        assert not cyclic[0].recurrence
+        assert part.recurrences == ()
+
+    def test_alg6_all_nonneg_no_recurrence(self):
+        prog = paper_alg6(8)
+        part = analyze_sccs(prog, carried(prog))
+        assert part.recurrences == ()
+
+
+class TestRecurrenceClassification:
+    def test_skew_chunk_is_min_carried_linearized_distance(self):
+        prog = skew_stencil(6, 5)
+        part = analyze_sccs(prog, carried(prog))
+        (rec,) = part.recurrences
+        # distance (1,-1) linearizes to inner_extent - 1 = 4
+        assert rec.chunk == rec.carried_min == 4
+        assert rec.statements == ("S1",)
+        assert rec.cyclic
+
+    def test_mixed_cycle_chunk_one(self):
+        prog = mixed_cycle()
+        part = analyze_sccs(prog, carried(prog))
+        (rec,) = part.recurrences
+        assert set(rec.statements) == {"S1", "S2"}
+        # the (0,1) dependence forces fully sequential chunks
+        assert rec.chunk == 1
+
+    def test_chunk_limit_knob_caps_but_never_zero(self):
+        prog = skew_stencil(6, 9)
+        part = analyze_sccs(prog, carried(prog), chunk_limit=3)
+        assert part.recurrences[0].chunk == 3
+        part = analyze_sccs(prog, carried(prog), chunk_limit=100)
+        assert part.recurrences[0].chunk == 8  # capped by carried_min
+        part = analyze_sccs(prog, carried(prog), chunk_limit=0)
+        assert part.recurrences[0].chunk == 1
+
+    def test_dswp_free_orders_force_sequential_chunks(self):
+        """Per-statement processor order is free under dswp — batching a
+        chunk may not reorder it, so recurrence chunks collapse to 1."""
+
+        prog = skew_stencil(6, 9)
+        part = analyze_sccs(prog, carried(prog), model="dswp")
+        assert part.recurrences[0].chunk == 1
+
+    def test_signature_is_bounds_free(self):
+        a = scc_signature(skew_stencil(6, 5), carried(skew_stencil(6, 5)))
+        b = scc_signature(skew_stencil(40, 11), carried(skew_stencil(40, 11)))
+        assert a == b
+
+
+class TestUnschedulableDiagnostics:
+    def test_witness_cycle_names_scc_statements(self):
+        prog = paper_alg6(6)
+        deps = [
+            Dependence(FLOW, "S1", "S2", "a", (1,)),
+            Dependence(FLOW, "S2", "S1", "b", (-1,)),
+        ]
+        with pytest.raises(WavefrontError) as ei:
+            validate_retained(prog, deps)
+        msg = str(ei.value)
+        assert "SCC {S1, S2}" in msg
+        assert "witness cycle" in msg
+        assert "S2 δf(b, Δ=-1) S1" in msg
+        assert "deadlock" in msg
+
+    def test_zero_distance_backward_rejected(self):
+        prog = paper_alg6(6)
+        bad = Dependence(FLOW, "S3", "S1", "a", (0,))
+        with pytest.raises(WavefrontError, match="sink precedes the source"):
+            validate_retained(prog, [bad])
+
+    def test_zero_distance_self_dep_rejected(self):
+        prog = paper_alg6(6)
+        bad = Dependence(FLOW, "S1", "S1", "a", (0,))
+        with pytest.raises(WavefrontError, match="before itself"):
+            validate_retained(prog, [bad])
+
+    def test_raised_at_parallelize_time_for_every_backend(self):
+        """The satellite contract: unschedulable sets fail in parallelize(),
+        not mid-execution — including for the threaded backend, which would
+        otherwise deadlock at run time."""
+
+        prog = paper_alg6(6)
+        deps = list(analyze(prog)) + [
+            Dependence(FLOW, "S2", "S1", "b", (-1,)),
+        ]
+        for backend in ("threaded", "wavefront"):
+            with pytest.raises(WavefrontError, match="witness cycle"):
+                parallelize(prog, deps=deps, backend=backend)
+
+    def test_analyzer_output_always_validates(self):
+        for prog in (paper_alg4(8), skew_stencil(), mixed_cycle()):
+            validate_retained(prog, analyze(prog))  # must not raise
+
+
+class TestHybridLayering:
+    def test_every_cross_unit_dep_increases_level(self):
+        for prog in (skew_stencil(), mixed_cycle(), skew_pipeline()):
+            deps = carried(prog)
+            wf = schedule_levels(prog, deps)
+            lvl = wf.level_of()
+            scc_of = wf.scc.scc_of()
+            rec = {s.id for s in wf.scc.recurrences}
+            for d in deps:
+                for it in prog.iterations():
+                    dst = tuple(x + dd for x, dd in zip(it, d.distance))
+                    if (d.sink, dst) not in lvl:
+                        continue
+                    same_chunk = (
+                        scc_of[d.source] == scc_of[d.sink]
+                        and scc_of[d.source] in rec
+                        and lvl[(d.source, it)] == lvl[(d.sink, dst)]
+                    )
+                    if same_chunk:
+                        # intra-chunk orders must be zero-distance, honored
+                        # by lexical statement order within the level
+                        assert all(x == 0 for x in d.distance)
+                    else:
+                        assert lvl[(d.source, it)] < lvl[(d.sink, dst)]
+
+    def test_chunk_widths_bounded_by_chunk_size(self):
+        wf = schedule_levels(skew_stencil(6, 5), carried(skew_stencil(6, 5)))
+        (rec,) = wf.scc.recurrences
+        assert wf.max_width <= rec.chunk
+        assert wf.instances == 6 * 5
+
+    def test_pipelining_beats_blocked_execution(self):
+        """The DOALL consumer levels right behind each producer chunk: total
+        depth stays near the chunk count instead of doubling."""
+
+        prog = skew_pipeline(8, 9)
+        wf = schedule_levels(prog, carried(prog))
+        (rec,) = wf.scc.recurrences
+        n_chunks = -(-72 // rec.chunk)
+        assert wf.depth <= n_chunks + 2  # pipelined
+        assert wf.depth < 2 * n_chunks  # far from blocked
+
+    def test_one_group_per_statement_and_level(self):
+        """The XLA cursor machinery requires it; the hybrid guarantees it."""
+
+        for prog in (skew_stencil(), mixed_cycle(), skew_pipeline()):
+            wf = schedule_levels(prog, carried(prog))
+            for groups in wf.levels:
+                names = [g.statement for g in groups]
+                assert len(names) == len(set(names))
+
+    def test_report_surfaces_partition(self):
+        rep = parallelize(skew_stencil(), method="isd", backend="wavefront")
+        s = rep.summary()
+        assert s["scc"]["recurrences"][0]["statements"] == ["S1"]
+        assert rep.wavefront.summary()["scc"]["sccs"] == 1

@@ -231,18 +231,32 @@ class TestLayering:
 
 class TestDiagnostics:
     def test_negative_distance_rejected_with_diagnostic(self):
+        """A lexicographically negative distance contradicts sequential
+        order — rejected at schedule time with the offending dependence
+        named (cyclic case: see tests/test_scc.py for witness cycles)."""
+
         prog = paper_alg6(6)
         sync = insert_synchronization(prog, analyze(prog))
         bad = Dependence(FLOW, "S1", "S2", "a", (-1,))
-        with pytest.raises(WavefrontError, match="Δ-sign mix"):
+        with pytest.raises(
+            WavefrontError, match="sequential execution order"
+        ):
             schedule_wavefronts(sync, [bad])
 
-    def test_mixed_sign_2d_distance_rejected(self):
+    def test_mixed_sign_2d_distance_now_schedules(self):
+        """Per-dimension sign mixes with lexicographically positive
+        distances are no longer rejected: the SCC-condensed hybrid
+        schedules them (here as a cross-SCC edge between instance units)."""
+
         prog = _distance_2d()
         sync = insert_synchronization(prog, analyze(prog))
-        bad = Dependence(FLOW, "S1", "S2", "a", (1, -1))
-        with pytest.raises(WavefrontError, match="non-negative"):
-            schedule_wavefronts(sync, [bad])
+        mixed = Dependence(FLOW, "S1", "S2", "a", (1, -1))
+        wf = schedule_wavefronts(sync, list(analyze(prog)) + [mixed])
+        lvl = wf.level_of()
+        for it in prog.iterations():
+            dst = (it[0] + 1, it[1] - 1)
+            if ("S2", dst) in lvl:
+                assert lvl[("S1", it)] < lvl[("S2", dst)]
 
     def test_unknown_backend_rejected(self):
         with pytest.raises(ValueError, match="unknown backend"):
