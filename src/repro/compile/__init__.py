@@ -75,11 +75,15 @@ __all__ = sorted(
 # defer jax-heavy imports until the backend is actually exercised.
 # ---------------------------------------------------------------------- #
 
-def _xla_prepare(optimized, retained):
+def _xla_prepare(optimized, retained, **options):
     from repro.compile.cache import get_or_compile
 
     compiled, _hit = get_or_compile(
-        optimized.program, tuple(retained), model="doall"
+        optimized.program,
+        tuple(retained),
+        model="doall",
+        chunk_limit=options.get("chunk_limit"),
+        scc_policy=options.get("scc_policy"),
     )
     return {"compiled": compiled}
 

@@ -93,6 +93,7 @@ class CompileCache:
         model: str = "doall",
         processors: Optional[Dict[str, object]] = None,
         chunk_limit: Optional[int] = None,
+        scc_policy: object = None,
     ) -> Tuple["CompiledProgram", bool]:
         """Resolve (or build) the artifact for this structure.
 
@@ -104,7 +105,9 @@ class CompileCache:
 
         from repro.compile.lowering import CompiledProgram
 
-        key = structural_key(program, retained, model, processors, chunk_limit)
+        key = structural_key(
+            program, retained, model, processors, chunk_limit, scc_policy
+        )
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -118,6 +121,7 @@ class CompileCache:
             model=model,
             processors=processors,
             chunk_limit=chunk_limit,
+            scc_policy=scc_policy,
         )
         built.cache = self
         with self._lock:
@@ -140,6 +144,7 @@ def get_or_compile(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> Tuple["CompiledProgram", bool]:
     """Module-level convenience over the process-global cache."""
 
@@ -149,6 +154,7 @@ def get_or_compile(
         model=model,
         processors=processors,
         chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
 
 

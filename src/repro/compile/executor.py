@@ -47,6 +47,7 @@ def run_xla(
     processors: Optional[Dict[str, object]] = None,
     cache: Optional[CompileCache] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> XlaReport:
     """Execute ``sync`` through the structural compile cache.
 
@@ -68,6 +69,8 @@ def run_xla(
             processors = schedule.processors
         if chunk_limit is None:
             chunk_limit = schedule.chunk_limit
+        if scc_policy is None:
+            scc_policy = schedule.scc_policy
     else:
         retained = tuple(_sync_dependences(sync))
     compiled, hit = cache.get_or_compile(
@@ -76,6 +79,7 @@ def run_xla(
         model=model,
         processors=processors,
         chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
 
     init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}

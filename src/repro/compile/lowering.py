@@ -30,7 +30,13 @@ chunked DOACROSS block appears as a *recurrence band* — a run of consecutive
 levels whose active groups are the same statements at consecutive table rows.
 Those bands lower to a nested ``lax.fori_loop`` over chunks with the store
 (the recurrence carry) in the loop state: no per-level ``lax.cond`` dispatch,
-no cursor bookkeeping, only the band's statements in the loop body.  Levels
+no cursor bookkeeping, only the band's statements in the loop body.  The
+band detector is strategy-agnostic: a unimodular-*skew* SCC's diagonal
+wavefronts and a per-SCC-*dswp* pipeline's lane progressions also advance
+one table row per level in lockstep, so they collapse into the same nested
+loop — the skew's index remap back to original coordinates is already folded
+into the level tables (the schedule emits original iteration points), and
+each dswp lane is simply its statement's own (group × lane) table.  Levels
 outside any band keep the generic cursor machinery, so pipelined schedules
 that interleave a recurrence with downstream acyclic levels still compile.
 Schedules without recurrence SCCs take the exact pre-hybrid trace (a single
@@ -298,6 +304,7 @@ class CompiledProgram:
         model: str = "doall",
         processors: Optional[Dict[str, object]] = None,
         chunk_limit: Optional[int] = None,
+        scc_policy: object = None,
     ) -> None:
         import collections
         import threading
@@ -310,6 +317,7 @@ class CompiledProgram:
         self.model = model
         self.processors = dict(processors) if processors else None
         self.chunk_limit = chunk_limit
+        self.scc_policy = scc_policy
         self.cache = None  # back-reference set by the owning CompileCache
         self._cases: "collections.OrderedDict[Tuple, PreparedCase]" = (
             collections.OrderedDict()
@@ -426,6 +434,7 @@ class CompiledProgram:
             model=self.model,
             processors=self.processors,
             chunk_limit=self.chunk_limit,
+            scc_policy=self.scc_policy,
         )
         n_levels = sched.depth
         arrays = tuple(sorted(dense.data))

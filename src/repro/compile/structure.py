@@ -13,10 +13,15 @@ specializes on and nothing else:
   * the retained (synchronized) dependences, as an order-insensitive set;
   * the execution model (``doall`` / ``dswp`` / ``procmap`` + processor map);
   * the SCC partition of the statement graph (:func:`repro.core.scc_signature`
-    — membership + recurrence flags, bounds-free) and the DOACROSS
-    ``chunk_limit`` knob, so two artifacts that condense or chunk the same
-    graph differently can never alias.  Chunk *sizes* are linearized against
-    concrete bounds and live in the per-bounds table cache below.
+    — membership + recurrence flags + the bounds-free unimodular-skew
+    candidate per recurrence SCC), the DOACROSS ``chunk_limit`` knob, and
+    the ``scc_policy`` knob — the *resolved policy object* canonicalized by
+    :func:`_const_fp` with its full instance state (nested policies,
+    ndarray-valued knobs by content hash), so two artifacts that condense,
+    chunk, skew, or strategize the same graph differently can never alias.
+    Chunk *sizes* and the cost model's per-bounds strategy choice are
+    linearized against concrete bounds and live in the per-bounds table
+    cache below.
 
 Deliberately **excluded**: the loop bounds.  Two requests that differ only in
 iteration count share a key (the per-bounds level tables are a second-level
@@ -318,11 +323,18 @@ def structural_key(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> str:
     """The compile-cache key: hash of (statement graph, retained dependence
-    set, execution model, SCC partition, chunk knob).  Loop bounds do not
-    participate."""
+    set, execution model, SCC partition incl. bounds-free skew candidates,
+    chunk knob, scheduling-policy knob).  Loop bounds do not participate —
+    under ``scc_policy="auto"`` the cost model may pick different strategies
+    for different bounds of one structure, which is exactly why the chosen
+    strategy lives with the per-bounds level tables inside the artifact
+    while the *policy* (and the bounds-free skew matrix each SCC would use)
+    lives here."""
 
+    from repro.core.policy import resolve_policy
     from repro.core.scc import scc_signature
 
     procs = (
@@ -330,6 +342,13 @@ def structural_key(
         if processors
         else None
     )
+    # The policy participates by full canonicalized instance state, not by
+    # name or repr: _const_fp recurses into __dict__ (nested policy objects,
+    # ndarray-valued knobs by content hash, address-bearing reprs forced to
+    # miss), so two differently-configured custom policies can never alias
+    # one artifact — the same no-false-hits bar the compute fingerprints
+    # are held to.
+    policy_fp = ("scc-policy", _const_fp(resolve_policy(scc_policy)))
     return _digest(
         (
             program_signature(prog),
@@ -338,5 +357,6 @@ def structural_key(
             procs,
             scc_signature(prog, retained, model, processors),
             chunk_limit,
+            policy_fp,
         )
     )

@@ -157,10 +157,7 @@ class LoopProgram:
     def iterations(self) -> Sequence[Tuple[int, ...]]:
         """All iteration points in lexicographic (sequential) order."""
 
-        pts: list[Tuple[int, ...]] = [()]
-        for lo, hi in self.bounds:
-            pts = [p + (i,) for p in pts for i in range(lo, hi)]
-        return pts
+        return iterations_of(self.bounds)
 
     # ------------------------------------------------------------------ #
     def initial_store(self, pad: int = 8) -> dict:
@@ -185,6 +182,22 @@ class LoopProgram:
                 cells[idx] = (h % 97) / 7.0 - 5.0
             store[arr] = cells
         return store
+
+
+def iterations_of(
+    bounds: Sequence[Tuple[int, int]]
+) -> list[Tuple[int, ...]]:
+    """Iteration points of a rectangular nest in lexicographic order.
+
+    The single definition of sequential iteration order —
+    :meth:`LoopProgram.iterations` and the scheduling-policy cost model
+    both delegate here, so the contract cannot silently diverge.
+    """
+
+    pts: list[Tuple[int, ...]] = [()]
+    for lo, hi in bounds:
+        pts = [p + (i,) for p in pts for i in range(lo, hi)]
+    return pts
 
 
 def run_sequential(prog: LoopProgram, store: Mapping[str, dict] | None = None) -> dict:

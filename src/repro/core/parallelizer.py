@@ -29,7 +29,9 @@ decode loop each batch wave — skip re-analysis entirely.
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
+import functools
 import importlib
 import threading
 from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
@@ -43,6 +45,7 @@ from repro.core.elimination import (
 from repro.core.executor import run_threaded
 from repro.core.fission import FissionResult, fission
 from repro.core.ir import LoopProgram
+from repro.core.policy import resolve_policy
 from repro.core.scc import validate_retained
 from repro.core.sync import SyncProgram, insert_synchronization, strip_dependences
 from repro.core.wavefront import (
@@ -60,18 +63,18 @@ from repro.core.wavefront import (
 class BackendSpec:
     """One execution backend.
 
-    ``prepare(optimized_sync, retained)`` runs at parallelize time and
-    returns extra :class:`ParallelizationReport` fields (e.g. the wavefront
-    schedule, the compiled artifact); ``differential(sync, *, store,
-    stalls=None)`` executes a SyncProgram and returns its final store — the
-    hook ``tests/oracle.py`` uses to bit-compare every backend against the
+    ``prepare(optimized_sync, retained, **options)`` runs at parallelize
+    time and returns extra :class:`ParallelizationReport` fields (e.g. the
+    wavefront schedule, the compiled artifact); ``options`` carries the
+    scheduling knobs (``chunk_limit``, ``scc_policy``) the caller passed to
+    :func:`parallelize`.  ``differential(sync, *, store, stalls=None)``
+    executes a SyncProgram and returns its final store — the hook
+    ``tests/oracle.py`` uses to bit-compare every backend against the
     sequential oracle.
     """
 
     name: str
-    prepare: Optional[
-        Callable[[SyncProgram, Tuple[Dependence, ...]], Dict[str, object]]
-    ] = None
+    prepare: Optional[Callable[..., Dict[str, object]]] = None
     differential: Optional[Callable[..., Mapping[str, dict]]] = None
     description: str = ""
 
@@ -138,8 +141,13 @@ register_backend(
 register_backend(
     BackendSpec(
         name="wavefront",
-        prepare=lambda optimized, retained: {
-            "wavefront": schedule_wavefronts(optimized, list(retained))
+        prepare=lambda optimized, retained, **options: {
+            "wavefront": schedule_wavefronts(
+                optimized,
+                list(retained),
+                chunk_limit=options.get("chunk_limit"),
+                scc_policy=options.get("scc_policy"),
+            )
         },
         differential=lambda sync, *, store=None, stalls=None: run_wavefront(
             sync, store=store, compare=False
@@ -234,6 +242,44 @@ def _memoized_eliminate(
     return elim
 
 
+def _accepted_options(
+    prepare: Callable[..., Dict[str, object]], options: Dict[str, object]
+) -> Dict[str, object]:
+    """The subset of scheduling-knob kwargs ``prepare`` can receive.
+
+    Backends registered before the knobs existed declared
+    ``prepare(optimized, retained)`` — the registry is public API, so a
+    legacy registrant must keep working (it simply never sees the knobs)
+    instead of dying on an unexpected keyword argument.  The signature
+    reflection is memoized per callable: the serving loop re-plans through
+    here twice per wave, and warm plans are sub-millisecond.
+    """
+
+    accepted = _accepted_option_names(prepare)
+    if accepted is None:
+        return options
+    return {k: v for k, v in options.items() if k in accepted}
+
+
+@functools.lru_cache(maxsize=64)
+def _accepted_option_names(
+    prepare: Callable[..., Dict[str, object]]
+) -> Optional[frozenset]:
+    """``None`` = pass everything (``**kwargs`` or un-inspectable)."""
+
+    import inspect
+
+    try:
+        params = inspect.signature(prepare).parameters
+    except (TypeError, ValueError):  # C callables etc.: assume modern
+        return None
+    if any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    ):
+        return None
+    return frozenset(params)
+
+
 # ---------------------------------------------------------------------- #
 # Report + entry point
 # ---------------------------------------------------------------------- #
@@ -251,6 +297,30 @@ class ParallelizationReport:
     wavefront: Optional[WavefrontSchedule] = None
     # structural-cache artifact (backend="xla" only): repro.compile handle
     compiled: Optional[object] = None
+    # scheduling knobs this report was planned under (echoed into the
+    # statement-level SCC summary for backends without a schedule)
+    chunk_limit: Optional[int] = None
+    scc_policy: object = None
+
+    @functools.cached_property
+    def _statement_scc_summary(self) -> dict:
+        """SCC partition + strategy records for backends without a schedule.
+
+        Cached on the report: the cost model's exact-depth estimates make a
+        fresh ``analyze_sccs`` of a recurrence-bearing program an
+        O(instances) pass, too heavy to redo on every ``summary()`` call
+        (cached_property writes to ``__dict__``, which a frozen dataclass
+        permits — same pattern as WavefrontSchedule's cached stats).
+        """
+
+        from repro.core.scc import analyze_sccs
+
+        return analyze_sccs(
+            self.program,
+            self.elimination.retained,
+            chunk_limit=self.chunk_limit,
+            scc_policy=self.scc_policy,
+        ).summary()
 
     def summary(self) -> dict:
         naive = self.naive_sync.sync_instruction_count()
@@ -269,14 +339,10 @@ class ParallelizationReport:
         if self.wavefront is not None and self.wavefront.scc is not None:
             out["scc"] = self.wavefront.scc.summary()
         else:
-            # statement-level only — cheap enough to surface on every
-            # backend (chunk sizes are bounds-linearized here too, since
-            # the report's program carries concrete bounds)
-            from repro.core.scc import analyze_sccs
-
-            out["scc"] = analyze_sccs(
-                self.program, self.elimination.retained
-            ).summary()
+            # deep copy: the cached dict must not be mutable through the
+            # return value, or one caller's annotation would leak into
+            # every later summary() of this report
+            out["scc"] = copy.deepcopy(self._statement_scc_summary)
         if self.wavefront is not None:
             out["wavefront_depth"] = self.wavefront.depth
             out["wavefront_batched_ops"] = self.wavefront.batched_ops
@@ -293,6 +359,8 @@ def parallelize(
     deps: Optional[Sequence[Dependence]] = None,
     merge_sends: bool = False,
     backend: str = "threaded",
+    chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> ParallelizationReport:
     """Run the full §5 pipeline.
 
@@ -309,9 +377,27 @@ def parallelize(
     compiled artifact to the report — repeated structurally equal requests
     share the artifact and skip re-analysis (see the ``compile_cache``
     counters in :meth:`ParallelizationReport.summary`).
+
+    ``chunk_limit`` caps the DOACROSS chunk of chunked recurrence SCCs;
+    ``scc_policy`` selects the per-SCC recurrence strategy (``None``/
+    ``"auto"`` = cost model, ``"chunk"``/``"skew"``/``"dswp"`` forces one, a
+    :class:`~repro.core.policy.SchedulingPolicy` instance plugs in).  Both
+    are validated here, at the pipeline entry, so a bad knob fails with a
+    clear message instead of deep inside ``schedule_levels``.
     """
 
     spec = get_backend(backend)
+    if chunk_limit is not None and (
+        not isinstance(chunk_limit, int)
+        or isinstance(chunk_limit, bool)
+        or chunk_limit < 1
+    ):
+        raise ValueError(
+            f"chunk_limit must be a positive integer or None, got "
+            f"{chunk_limit!r} — a chunk of zero iterations cannot make "
+            "progress (use chunk_limit=1 for fully sequential chunks)"
+        )
+    resolve_policy(scc_policy)  # raises ValueError with the allowed values
 
     dep_list = list(deps) if deps is not None else analyze(prog)
     fiss = fission(prog, dep_list)
@@ -332,7 +418,12 @@ def parallelize(
         optimized = insert_synchronization(
             prog, list(elim.retained), merge=True
         )
-    extra = spec.prepare(optimized, elim.retained) if spec.prepare else {}
+    extra = {}
+    if spec.prepare:
+        options = {"chunk_limit": chunk_limit, "scc_policy": scc_policy}
+        extra = spec.prepare(
+            optimized, elim.retained, **_accepted_options(spec.prepare, options)
+        )
     return ParallelizationReport(
         program=prog,
         dependences=tuple(dep_list),
@@ -341,5 +432,7 @@ def parallelize(
         elimination=elim,
         optimized_sync=optimized,
         backend=backend,
+        chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
         **extra,
     )

@@ -17,18 +17,23 @@ after Baghdadi et al., arXiv:1111.6756; cycle detection framing after Alluru
      components with Tarjan's algorithm;
   2. classify each SCC — components whose internal dependences are all
      per-dimension non-negative keep the existing instance-level longest-path
-     layering; components carrying a mixed-sign internal dependence become
-     **recurrence blocks** executed as a chunked DOACROSS: iterations run in
-     sequential (lexicographic) order in chunks of ``m`` = the minimum
-     linearized carried distance inside the SCC, every statement batched over
-     the chunk's iterations (any two iterations less than ``m`` apart share
-     no enforced order, so a chunk is as parallel as the machine model
-     allows);
-  3. layer the mixed granularity — individual instances for layerable
-     statements, chunk super-nodes for recurrence statements — with one
-     global longest-path pass, which yields cross-SCC *pipelining* for free:
-     a downstream acyclic SCC's instances level right after the producer
-     chunk they read, not after the whole recurrence finishes.
+     layering (strategy ``"layer"``); components carrying a mixed-sign
+     internal dependence are **recurrence blocks** planned by the pluggable
+     scheduling-policy engine (:mod:`repro.core.policy`): a chunked DOACROSS
+     (``"chunk"`` — iterations in sequential order, chunks of the minimum
+     carried linearized distance), a unimodular-skew diagonal wavefront
+     (``"skew"`` — instance layering legalized by a det-±1 change of basis),
+     or a per-SCC dswp pipeline (``"dswp"`` — one lane per statement).  A
+     cost model picks per SCC by default; ``scc_policy`` forces one.  The
+     chosen :class:`~repro.core.policy.StrategyPlan` is recorded on each
+     :class:`SccInfo` (strategy, skew matrix, cost, and a human-readable
+     ``reason``) and surfaces through every report summary;
+  3. layer the mixed granularity — individual instances for layerable,
+     skewed, and dswp-piped statements, chunk super-nodes for chunked
+     recurrence statements — with one global longest-path pass, which yields
+     cross-SCC *pipelining* for free: a downstream acyclic SCC's instances
+     level right after the producer chunk (or skewed wavefront) they read,
+     not after the whole recurrence finishes.
 
 The result is expressed in the ordinary level/group vocabulary (one batched
 evaluation per (statement, level), groups within a level executed in lexical
@@ -56,10 +61,20 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram
+from repro.core.policy import (
+    Matrix,
+    SccContext,
+    StrategyPlan,
+    find_unimodular_skew,
+    linearize as _linearized,
+    resolve_policy,
+    strides_of as _strides,
+)
 
 Instance = Tuple[str, Tuple[int, ...]]
 # a scheduling unit: ("i", statement, iteration) for individually layered
-# instances, ("c", scc id, chunk index) for recurrence-block chunks
+# (incl. skewed / per-SCC-dswp) instances, ("c", scc id, chunk index) for
+# chunked recurrence blocks
 Unit = Tuple
 
 
@@ -84,22 +99,6 @@ def _lex_sign(vec: Sequence[int]) -> int:
         if v < 0:
             return -1
     return 0
-
-
-def _strides(bounds: Sequence[Tuple[int, int]]) -> Tuple[List[int], int]:
-    """Row-major strides of the iteration space + total iteration count."""
-
-    extents = [hi - lo for lo, hi in bounds]
-    strides = [0] * len(extents)
-    acc = 1
-    for k in range(len(extents) - 1, -1, -1):
-        strides[k] = acc
-        acc *= max(extents[k], 0)
-    return strides, acc
-
-
-def _linearized(distance: Sequence[int], strides: Sequence[int]) -> int:
-    return sum(d * s for d, s in zip(distance, strides))
 
 
 def _vacuous(distance: Sequence[int], bounds: Sequence[Tuple[int, int]]) -> bool:
@@ -293,16 +292,25 @@ def validate_retained(
 
 @dataclasses.dataclass(frozen=True)
 class SccInfo:
-    """One strongly connected component of the enforced-order graph."""
+    """One strongly connected component of the enforced-order graph.
+
+    For recurrence components, ``strategy``/``skew``/``cost``/``reason``
+    record the :class:`~repro.core.policy.StrategyPlan` the policy engine
+    chose; layerable components carry strategy ``"layer"``.
+    """
 
     id: int
     statements: Tuple[str, ...]  # lexical order
     cyclic: bool                 # the component contains a dependence cycle
-    recurrence: bool             # executed as a chunked DOACROSS block
-    chunk: Optional[int] = None  # iterations per chunk (recurrence only)
+    recurrence: bool             # carries a mixed-sign internal dependence
+    chunk: Optional[int] = None  # iterations per chunk (strategy "chunk")
     # min linearized carried distance inside the SCC (recurrence only) —
     # ``chunk`` equals it unless capped by the chunk_limit knob
     carried_min: Optional[int] = None
+    strategy: str = "layer"      # "layer" | "chunk" | "skew" | "dswp"
+    skew: Optional[Matrix] = None  # unimodular matrix (strategy "skew")
+    cost: Optional[float] = None   # cost-model estimate for the choice
+    reason: str = ""               # why this strategy won (human-readable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -311,6 +319,7 @@ class SccPartition:
 
     sccs: Tuple[SccInfo, ...]
     model: str
+    policy: str = "auto"  # canonical name of the scheduling policy used
 
     def scc_of(self) -> Dict[str, int]:
         return {s: info.id for info in self.sccs for s in info.statements}
@@ -326,12 +335,17 @@ class SccPartition:
             "recurrences": [
                 {
                     "statements": list(s.statements),
+                    "strategy": s.strategy,
                     "chunk": s.chunk,
                     "carried_min": s.carried_min,
+                    "skew": [list(r) for r in s.skew] if s.skew else None,
+                    "cost": s.cost,
+                    "reason": s.reason,
                 }
                 for s in self.recurrences
             ],
             "model": self.model,
+            "policy": self.policy,
         }
 
 
@@ -342,14 +356,19 @@ def analyze_sccs(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> SccPartition:
     """Condense + classify; validates the retained set first (may raise).
 
     ``chunk_limit`` caps the DOACROSS chunk size (smaller chunks are always
     sound — they only serialize more); ``None`` uses the full minimum
-    carried distance.
+    carried distance.  ``scc_policy`` selects the recurrence strategy per
+    SCC: ``None``/``"auto"`` runs the cost model, a strategy name
+    (``"chunk"``/``"skew"``/``"dswp"``) forces it, and any
+    :class:`~repro.core.policy.SchedulingPolicy` instance plugs in directly.
     """
 
+    policy = resolve_policy(scc_policy)
     validate_retained(prog, retained)
     bounds = prog.bounds
     deps = [d for d in retained if not _vacuous(d.distance, bounds)]
@@ -367,7 +386,6 @@ def analyze_sccs(
         for n in comp:
             member_of[n] = cid
 
-    strides, _total = _strides(bounds)
     lex = prog.lexical_index
     infos: List[SccInfo] = []
     for cid, comp in enumerate(comps):
@@ -380,31 +398,53 @@ def analyze_sccs(
         recurrence = any(
             any(x < 0 for x in d.distance) for d in internal
         )
-        chunk = carried_min = None
-        if recurrence:
-            lins = [
-                _linearized(d.distance, strides)
-                for d in internal
-                if _linearized(d.distance, strides) >= 1
-            ]
-            lins += [1 for (_a, _b, c) in free_internal if c == 1]
-            # a recurrence SCC always carries something: its mixed-sign dep
-            # is lexicographically positive and non-vacuous, hence lin ≥ 1
-            carried_min = min(lins)
-            chunk = carried_min
-            if chunk_limit is not None:
-                chunk = max(1, min(chunk, int(chunk_limit)))
+        statements = tuple(sorted(comp, key=lex))
+        if not recurrence:
+            infos.append(
+                SccInfo(
+                    id=cid,
+                    statements=statements,
+                    cyclic=cyclic,
+                    recurrence=False,
+                )
+            )
+            continue
+        ctx = SccContext(
+            statements=statements,
+            internal_deps=tuple(internal),
+            bounds=bounds,
+            model=model,
+            chunk_limit=chunk_limit,
+            carried_free=any(c == 1 for (_a, _b, c) in free_internal),
+        )
+        plan: Optional[StrategyPlan] = policy.plan(ctx)
+        if plan is None:
+            # a custom policy may decline an SCC; chunking is always sound
+            from repro.core.policy import ChunkedDoacross
+
+            plan = ChunkedDoacross().plan(ctx)
+            plan = dataclasses.replace(
+                plan,
+                reason=f"policy {policy.name!r} declined this SCC; "
+                f"fell back to chunk — {plan.reason}",
+            )
         infos.append(
             SccInfo(
                 id=cid,
-                statements=tuple(sorted(comp, key=lex)),
+                statements=statements,
                 cyclic=cyclic,
-                recurrence=recurrence,
-                chunk=chunk,
-                carried_min=carried_min,
+                recurrence=True,
+                chunk=plan.chunk,
+                carried_min=plan.carried_min,
+                strategy=plan.strategy,
+                skew=plan.skew,
+                cost=plan.cost,
+                reason=plan.reason,
             )
         )
-    return SccPartition(sccs=tuple(infos), model=model)
+    return SccPartition(
+        sccs=tuple(infos), model=model, policy=policy.name
+    )
 
 
 def scc_signature(
@@ -415,9 +455,11 @@ def scc_signature(
 ) -> Tuple:
     """Bounds-free canonical form of the SCC partition (cache-key component).
 
-    Membership and recurrence flags only — chunk sizes are linearized
-    against concrete bounds and belong to the per-bounds table cache, not
-    the structural key.
+    Membership, recurrence flags, and the bounds-free unimodular-skew
+    candidate per recurrence SCC (the matrix search depends only on the
+    internal distance vectors) — chunk sizes and the cost model's strategy
+    choice are evaluated against concrete bounds and belong to the
+    per-bounds table cache, not the structural key.
     """
 
     free = _free_statement_edges(prog, model, processors)
@@ -431,14 +473,19 @@ def scc_signature(
     out = []
     for comp in comps:
         mset = set(comp)
+        internal_dists = tuple(
+            d.distance
+            for d in retained
+            if d.source in mset and d.sink in mset
+        )
+        recurrence = any(any(x < 0 for x in d) for d in internal_dists)
         out.append(
             (
                 tuple(sorted(comp, key=lex)),
-                any(
-                    any(x < 0 for x in d.distance)
-                    for d in retained
-                    if d.source in mset and d.sink in mset
-                ),
+                recurrence,
+                find_unimodular_skew(internal_dists, prog.ndim)
+                if recurrence
+                else None,
             )
         )
     return tuple(out)
@@ -455,11 +502,16 @@ def hybrid_levels(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> Tuple[List[Dict[str, List[Tuple[int, ...]]]], SccPartition]:
     """Longest-path layering over mixed instance/chunk scheduling units.
 
     Returns ``(levels, partition)`` where ``levels[L]`` maps statement name
-    to its (iteration-ordered) batch at level ``L``.  Correctness argument:
+    to its (iteration-ordered) batch at level ``L``.  The partition's
+    per-SCC strategy records decide the scheduling units: ``"chunk"`` SCCs
+    become chunk super-nodes, ``"skew"`` and ``"dswp"`` SCCs stay
+    instance-granular (``"dswp"`` adds per-statement lane chains).
+    Correctness argument:
 
       * every enforced-order edge between *different* units strictly
         increases the level (Kahn longest path), exactly like the plain
@@ -469,6 +521,17 @@ def hybrid_levels(
         executors evaluate a level's groups in lexical statement order, so
         those hold; carried edges can never stay inside a chunk because the
         chunk size is the minimum carried linearized distance;
+      * skewed SCCs carry no intra-unit orders at all: every internal
+        dependence is an ordinary unit edge, so the longest-path pass — the
+        existing machinery, applied to what is isomorphically the
+        T-transformed instance space (per-dimension non-negative distances,
+        the ISD precondition) — strictly levels it; the levels carry
+        original coordinates, i.e. the skew's index remap is already folded
+        into the emitted batches;
+      * per-SCC dswp adds per-statement lexicographic chains *on top of*
+        intra-iteration program order (the elimination assumed program
+        order; adding enforced edges is always sound), pipelining the lanes
+        across iterations without reordering within one;
       * the unit graph is acyclic: every edge advances the sequential
         (iteration, lexical position) order, and chunks of one SCC are
         totally ordered by construction.
@@ -480,13 +543,21 @@ def hybrid_levels(
         model=model,
         processors=processors,
         chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
     bounds = prog.bounds
     deps = [d for d in retained if not _vacuous(d.distance, bounds)]
     strides, total = _strides(bounds)
     lows = [lo for lo, _hi in bounds]
     member_of = part.scc_of()
-    rec_info = {info.id: info for info in part.recurrences}
+    chunk_info = {
+        info.id: info
+        for info in part.recurrences
+        if info.strategy == "chunk"
+    }
+    lane_sccs = [
+        info for info in part.recurrences if info.strategy == "dswp"
+    ]
     names = prog.names
     pts = list(prog.iterations())
 
@@ -494,7 +565,7 @@ def hybrid_levels(
         return sum((x - lo) * s for x, lo, s in zip(it, lows, strides))
 
     def unit(stmt: str, it: Tuple[int, ...]) -> Unit:
-        info = rec_info.get(member_of[stmt])
+        info = chunk_info.get(member_of[stmt])
         if info is not None:
             return ("c", info.id, pos(it) // info.chunk)
         return ("i", stmt, it)
@@ -549,8 +620,21 @@ def hybrid_levels(
             if dst in in_space:
                 add(unit(d.source, it), unit(d.sink, dst))
 
-    # chunk sequencing: a recurrence block iterates its carry in order
-    for info in rec_info.values():
+    # per-SCC dswp lanes: each statement of the SCC is one sequential
+    # processor, so its lexicographic-successor order is enforced for free
+    if lane_sccs:
+        from repro.core.isd import _next_point
+
+        nxt_of = {it: _next_point(it, bounds) for it in pts}
+        for info in lane_sccs:
+            for s in info.statements:
+                for it in pts:
+                    nxt = nxt_of[it]
+                    if nxt is not None:
+                        add(unit(s, it), unit(s, nxt))
+
+    # chunk sequencing: a chunked recurrence block iterates its carry in order
+    for info in chunk_info.values():
         n_chunks = -(-total // info.chunk)
         for t in range(n_chunks - 1):
             add(("c", info.id, t), ("c", info.id, t + 1))
@@ -593,7 +677,7 @@ def hybrid_levels(
             if u[0] == "i":
                 levels[level[u]].setdefault(s, []).append(it)
     # chunk units expand to one batch per member statement (lexical order)
-    for info in rec_info.values():
+    for info in chunk_info.values():
         n_chunks = -(-total // info.chunk)
         for t in range(n_chunks):
             lvl = level[("c", info.id, t)]

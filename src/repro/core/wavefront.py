@@ -26,9 +26,12 @@ The plain longest-path layering is only defined when retained distances are
 per-dimension non-negative (the ISD precondition).  Retained sets with
 mixed-sign distance components — skewed stencils, cross-iteration cycles
 with a Δ-sign mix — route through the SCC-condensed hybrid scheduler
-(:mod:`repro.core.scc`): Tarjan condensation of the statement graph, chunked
-DOACROSS execution for recurrence components, instance-level layering with
-cross-SCC pipelining for everything else.  Only dependence sets that
+(:mod:`repro.core.scc`): Tarjan condensation of the statement graph, then a
+per-SCC strategy from the scheduling-policy engine (:mod:`repro.core.policy`
+— chunked DOACROSS, unimodular-skew diagonal wavefront, or per-SCC dswp
+lanes; cost model by default, forced via ``scc_policy``) for recurrence
+components, instance-level layering with cross-SCC pipelining for
+everything else.  Only dependence sets that
 contradict sequential execution order (lexicographically negative or
 backward zero distances — the send/wait machine would deadlock) still raise
 :class:`WavefrontError`, at schedule/parallelize time, naming the offending
@@ -104,12 +107,17 @@ class WavefrontSchedule:
     # for other bounds under the same model)
     processors: Optional[Dict[str, object]] = None
     # Tarjan condensation of the statement graph (repro.core.scc); carries
-    # the recurrence blocks' chunk sizes when the hybrid path was taken
+    # the per-SCC strategy records (chunk sizes, skew matrices, cost-model
+    # reasons) when the hybrid path was taken
     scc: Optional[SccPartition] = None
     # cap on DOACROSS chunk sizes this schedule was built with (the knob is
     # part of the lowering hand-off: re-layering for other bounds must chunk
     # under the same cap)
     chunk_limit: Optional[int] = None
+    # the scc_policy spec this schedule was planned under (None/"auto",
+    # a strategy name, or a SchedulingPolicy instance) — part of the
+    # lowering hand-off for the same reason as chunk_limit
+    scc_policy: object = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -178,6 +186,7 @@ def schedule_wavefronts(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> WavefrontSchedule:
     """Dependence-level layering of ``sync`` (hybrid when cycles demand it).
 
@@ -195,6 +204,7 @@ def schedule_wavefronts(
         model=model,
         processors=processors,
         chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
 
 
@@ -219,6 +229,7 @@ def schedule_levels(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> WavefrontSchedule:
     """Layer a bare :class:`LoopProgram` given its retained dependences.
 
@@ -230,8 +241,11 @@ def schedule_levels(
     ISD layering below; sets with mixed-sign distance components route
     through the SCC-condensed hybrid (:func:`repro.core.scc.hybrid_levels`)
     — acyclic components stay instance-layered (pipelined), recurrence
-    components become chunked DOACROSS blocks of at most ``chunk_limit``
-    iterations (default: the component's minimum carried distance).
+    components execute under the strategy the scheduling-policy engine
+    (:mod:`repro.core.policy`) picks per SCC: chunked DOACROSS blocks of at
+    most ``chunk_limit`` iterations, a unimodular-skew diagonal wavefront,
+    or a per-SCC dswp pipeline.  ``scc_policy`` forces one strategy
+    (``"chunk"``/``"skew"``/``"dswp"``); the default runs the cost model.
     """
 
     deps = list(retained)
@@ -244,6 +258,7 @@ def schedule_levels(
             model=model,
             processors=processors,
             chunk_limit=chunk_limit,
+            scc_policy=scc_policy,
         )
         return WavefrontSchedule(
             program=prog,
@@ -253,6 +268,7 @@ def schedule_levels(
             processors=dict(processors) if processors else None,
             scc=part,
             chunk_limit=chunk_limit,
+            scc_policy=scc_policy,
         )
 
     try:
@@ -305,8 +321,15 @@ def schedule_levels(
         model=model,
         retained=tuple(deps),
         processors=dict(processors) if processors else None,
-        scc=analyze_sccs(prog, deps, model=model, processors=processors),
+        scc=analyze_sccs(
+            prog,
+            deps,
+            model=model,
+            processors=processors,
+            scc_policy=scc_policy,
+        ),
         chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
 
 
@@ -444,6 +467,7 @@ def run_wavefront(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
+    scc_policy: object = None,
 ) -> WavefrontReport:
     """Execute ``sync`` level by level, one vectorized op per group.
 
@@ -455,7 +479,11 @@ def run_wavefront(
     """
 
     sched = schedule or schedule_wavefronts(
-        sync, model=model, processors=processors, chunk_limit=chunk_limit
+        sync,
+        model=model,
+        processors=processors,
+        chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
     prog = sync.program
     init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}

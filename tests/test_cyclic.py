@@ -161,7 +161,10 @@ class TestCyclicDifferential:
         rep = parallelize(prog, method="isd")
         for chunk_limit in (1, 2, 3):
             out = run_wavefront(
-                rep.optimized_sync, chunk_limit=chunk_limit, compare=True
+                rep.optimized_sync,
+                chunk_limit=chunk_limit,
+                scc_policy="chunk",
+                compare=True,
             )
             (rec,) = out.schedule.scc.recurrences
             assert rec.chunk == chunk_limit

@@ -35,10 +35,64 @@ def test_pipeline_demo_main(monkeypatch, capsys):
     assert "matches sequential reference: True" in out
 
 
+def test_serve_cyclic_plan_concurrent_replanning():
+    """The serving path's recurrence-bearing scan rides the structural
+    cache under concurrent re-planning: one artifact, counted hits for
+    every wave after the first, and a recurrence strategy on the record."""
+
+    import concurrent.futures
+    import importlib
+
+    from repro.compile import clear_compile_cache, compile_cache_stats
+
+    serve = importlib.import_module("repro.launch.serve")
+    clear_compile_cache()
+    first = serve.plan_scan_sync(3, 4)  # cold: the one structural miss
+    (rec,) = first.summary()["scc"]["recurrences"]
+    assert rec["strategy"] in ("skew", "chunk", "dswp")
+    assert rec["statements"] == ["RESCORE"]
+    assert first.summary()["scc"]["policy"] == "auto"
+
+    waves = 6
+    with concurrent.futures.ThreadPoolExecutor(max_workers=4) as pool:
+        plans = list(
+            pool.map(lambda _: serve.plan_scan_sync(3, 4), range(waves))
+        )
+    # different bounds = same structure: still the same artifact
+    other_bounds = serve.plan_scan_sync(5, 7)
+    keys = {p.compiled.key for p in plans} | {
+        first.compiled.key,
+        other_bounds.compiled.key,
+    }
+    assert len(keys) == 1, "concurrent re-plans must share one artifact"
+    stats = compile_cache_stats()
+    assert stats["misses"] == 1
+    assert stats["hits"] == waves + 1
+
+
+def test_serve_concurrent_wave_planning_pairs_decode_and_scan():
+    """plan_wave resolves the acyclic decode plan and the cyclic scan plan
+    concurrently; repeated waves hit the cache for both structures."""
+
+    import importlib
+
+    from repro.compile import clear_compile_cache, compile_cache_stats
+
+    serve = importlib.import_module("repro.launch.serve")
+    clear_compile_cache()
+    for _ in range(3):
+        decode_plan, scan_plan = serve.plan_wave(4, 3)
+    assert decode_plan.summary()["scc"]["recurrences"] == []
+    assert scan_plan.summary()["scc"]["recurrences"]
+    stats = compile_cache_stats()
+    assert stats["misses"] == 2  # one per structure, first wave only
+    assert stats["hits"] == 4  # two hits per subsequent wave
+
+
 @pytest.mark.slow
 def test_serve_main(monkeypatch, capsys):
     """The serving driver end to end (smoke scale), including the per-wave
-    sync plan riding the structural compile cache."""
+    sync plans riding the structural compile cache."""
 
     import importlib
 
@@ -53,3 +107,5 @@ def test_serve_main(monkeypatch, capsys):
     out = capsys.readouterr().out
     assert "decode sync plan:" in out
     assert "compile cache" in out
+    assert "cyclic scan plan:" in out
+    assert "strategy=" in out

@@ -1,0 +1,429 @@
+"""Property + unit coverage for the per-SCC scheduling-policy engine
+(repro.core.policy): unimodular-skew legality (determinant ±1, transformed
+retained distances per-dimension non-negative, bijective round-trip of
+instance coordinates over the iteration space), cost-model strategy
+selection, forced-policy fallback, entry-point validation, and differential
+bit-equality of every strategy on both fast backends.
+
+Follows the tests/test_strip_properties.py form: seeded-random suites that
+always run, plus hypothesis ``@given`` versions (skipped without the
+``test`` extra) over the same generators.
+"""
+
+import itertools
+import random
+
+import pytest
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+from oracle import assert_equivalent
+from repro.core import (
+    ArrayRef,
+    ChunkedDoacross,
+    CostModelPolicy,
+    LoopProgram,
+    PerSccModel,
+    Statement,
+    UnimodularSkew,
+    analyze,
+    analyze_sccs,
+    find_unimodular_skew,
+    parallelize,
+    resolve_policy,
+    run_wavefront,
+    skew_point,
+    unskew_point,
+)
+from repro.core.policy import mat_det, mat_vec, policy_signature
+
+
+def carried(prog):
+    return [d for d in analyze(prog) if d.loop_carried]
+
+
+def skew_stencil(ni=6, nj=5):
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def wide_serialized(ni=6, nj=24):
+    """{(0,1), (1,-1)} self-recurrence: chunk pinned to 1, skew runs a
+    diagonal wavefront — the policy engine's motivating case."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def unskewable(ni=6, nj=12):
+    """{(1,-4), (1,4)}: the feasible-row cone degenerates to (a, 0) rows
+    inside the bounded entry range, so no det-±1 matrix exists — forced
+    skew must fall back to chunking."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (-1, 4)), ArrayRef("a", (-1, -4))),
+            ),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def random_distances(seed: int):
+    """Lexicographically positive 2-D distance sets biased to mixed signs
+    (the analyzer only ever retains lex-non-negative distances)."""
+
+    rng = random.Random(seed)
+    dists = []
+    for _ in range(rng.randint(1, 4)):
+        di = rng.randint(0, 2)
+        dj = rng.randint(-3, 3) if di > 0 else rng.randint(0, 3)
+        if di == 0 and dj == 0:
+            dj = 1
+        dists.append((di, dj))
+    return dists
+
+
+# ---------------------------------------------------------------------- #
+# Skew legality properties (seeded — always run)
+# ---------------------------------------------------------------------- #
+
+class TestSkewLegality:
+    def _assert_legal(self, dists, ndim=2, box=None):
+        mat = find_unimodular_skew(dists, ndim)
+        if mat is None:
+            return None
+        # (1) unimodular: determinant is exactly ±1
+        assert mat_det(mat) in (1, -1)
+        # (2) every transformed distance is per-dimension non-negative
+        # (implies lexicographic non-negativity), and non-zero distances
+        # stay non-zero (a bijection cannot collapse a dependence)
+        for d in dists:
+            td = mat_vec(mat, d)
+            assert all(x >= 0 for x in td), (mat, d, td)
+            if any(x != 0 for x in d):
+                assert any(x != 0 for x in td)
+        # (3) round-tripped instance coordinates are bijective on the
+        # iteration space: unskew(skew(p)) == p pointwise and the image has
+        # full cardinality (injectivity)
+        box = box or [range(-2, 4)] * ndim
+        pts = list(itertools.product(*box))
+        image = {skew_point(mat, p) for p in pts}
+        assert len(image) == len(pts)
+        for p in pts:
+            assert unskew_point(mat, skew_point(mat, p)) == p
+        return mat
+
+    @pytest.mark.parametrize("seed", range(40))
+    def test_seeded_random_distance_sets(self, seed):
+        self._assert_legal(random_distances(seed))
+
+    def test_identity_when_already_nonnegative(self):
+        assert find_unimodular_skew([(1, 0), (0, 2)], 2) == ((1, 0), (0, 1))
+        assert find_unimodular_skew([(2,), (1,)], 1) == ((1,),)
+
+    def test_classic_skew_found_and_legal(self):
+        mat = self._assert_legal([(1, -1)])
+        assert mat is not None
+
+    def test_wide_serializer_distances_skewable(self):
+        assert self._assert_legal([(0, 1), (1, -1)]) is not None
+
+    def test_infeasible_cone_returns_none(self):
+        assert find_unimodular_skew([(1, -4), (1, 4)], 2) is None
+
+    def test_one_dimensional_negative_has_no_skew(self):
+        # 1-D retained distances are validated lex-non-negative upstream;
+        # a genuinely negative one admits no 1-D unimodular fix
+        assert find_unimodular_skew([(-1,)], 1) is None
+
+    def test_three_dimensional_elementary_search(self):
+        mat = self._assert_legal(
+            [(1, -1, 0), (0, 1, 0), (0, 0, 1)], ndim=3,
+            box=[range(-1, 3)] * 3,
+        )
+        assert mat is not None
+
+    @given(st.integers(min_value=0, max_value=10**9))
+    @settings(
+        max_examples=50,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_property_skew_legality(self, seed):
+        self._assert_legal(random_distances(seed))
+
+
+# ---------------------------------------------------------------------- #
+# Strategy selection / cost model
+# ---------------------------------------------------------------------- #
+
+class TestStrategySelection:
+    def test_cost_model_picks_skew_on_wide_serialized_recurrence(self):
+        prog = wide_serialized(6, 24)
+        part = analyze_sccs(prog, carried(prog))
+        (rec,) = part.recurrences
+        assert rec.strategy == "skew"
+        assert rec.skew is not None
+        assert "cost model picked skew" in rec.reason
+        # the skewed depth must beat the serialized chunk depth recorded
+        # in the scoreboard
+        chunk_part = analyze_sccs(prog, carried(prog), scc_policy="chunk")
+        assert rec.cost < chunk_part.recurrences[0].cost
+
+    def test_cost_model_falls_back_to_chunk_when_skew_infeasible(self):
+        prog = unskewable()
+        part = analyze_sccs(prog, carried(prog))
+        (rec,) = part.recurrences
+        assert rec.strategy in ("chunk", "dswp")  # skew must not appear
+        assert rec.skew is None
+
+    def test_forced_skew_on_unskewable_scc_falls_back_with_reason(self):
+        prog = unskewable()
+        part = analyze_sccs(prog, carried(prog), scc_policy="skew")
+        (rec,) = part.recurrences
+        assert rec.strategy == "chunk"
+        assert "infeasible" in rec.reason and "fell back to chunk" in rec.reason
+
+    def test_forced_strategies_are_recorded(self):
+        prog = skew_stencil()
+        for name in ("chunk", "skew", "dswp"):
+            part = analyze_sccs(prog, carried(prog), scc_policy=name)
+            (rec,) = part.recurrences
+            assert rec.strategy == name
+            assert part.policy == name
+
+    def test_non_doall_models_keep_chunking(self):
+        """Skew/dswp plans decline non-doall models (per-processor free
+        orders already serialize the lanes), so the hybrid behaves exactly
+        as before: chunk 1 under dswp."""
+
+        prog = skew_stencil(6, 9)
+        part = analyze_sccs(prog, carried(prog), model="dswp")
+        (rec,) = part.recurrences
+        assert rec.strategy == "chunk"
+        assert rec.chunk == 1
+
+    def test_custom_policy_instance_plugs_in(self):
+        class SkewOnly(UnimodularSkew):
+            name = "skew-only"
+
+        prog = skew_stencil()
+        part = analyze_sccs(prog, carried(prog), scc_policy=SkewOnly())
+        assert part.recurrences[0].strategy == "skew"
+        assert part.policy == "skew-only"
+
+    def test_report_summary_carries_strategy_and_reason(self):
+        rep = parallelize(wide_serialized(5, 16), method="isd",
+                          backend="wavefront")
+        (rec,) = rep.summary()["scc"]["recurrences"]
+        assert rec["strategy"] == "skew"
+        assert rec["skew"] is not None
+        assert "cost model" in rec["reason"]
+        assert rep.summary()["scc"]["policy"] == "auto"
+        # threaded backend (no schedule) surfaces the same strategy record
+        rep_t = parallelize(wide_serialized(5, 16), method="isd")
+        assert rep_t.summary()["scc"]["recurrences"][0]["strategy"] == "skew"
+
+    def test_policy_signature_distinguishes_but_is_stable(self):
+        assert policy_signature(None) == policy_signature("auto")
+        assert policy_signature("skew") != policy_signature("chunk")
+        assert policy_signature("skew") != policy_signature(None)
+        assert policy_signature(CostModelPolicy()) == policy_signature("auto")
+        assert policy_signature(
+            CostModelPolicy(candidates=(ChunkedDoacross(),))
+        ) != policy_signature("auto")
+
+    def test_structural_key_covers_custom_policy_state(self):
+        """The compile-cache key canonicalizes policy instance state, so
+        differently-configured instances of one custom class never alias
+        one artifact (and equal configurations do share one)."""
+
+        from repro.compile.structure import structural_key
+
+        class ThresholdPolicy(ChunkedDoacross):
+            name = "threshold"
+
+            def __init__(self, threshold):
+                self.threshold = threshold
+
+        prog = skew_stencil(4, 4)
+        deps = tuple(carried(prog))
+        k1 = structural_key(prog, deps, scc_policy=ThresholdPolicy(1))
+        k9 = structural_key(prog, deps, scc_policy=ThresholdPolicy(9))
+        k1b = structural_key(prog, deps, scc_policy=ThresholdPolicy(1))
+        assert k1 != k9
+        assert k1 == k1b
+        assert structural_key(prog, deps) == structural_key(
+            prog, deps, scc_policy="auto"
+        )
+        assert structural_key(prog, deps, scc_policy="skew") != structural_key(
+            prog, deps, scc_policy="chunk"
+        )
+
+    def test_resolve_policy_validation(self):
+        with pytest.raises(ValueError, match="unknown scc_policy"):
+            resolve_policy("diagonal")
+        with pytest.raises(ValueError, match="SchedulingPolicy"):
+            resolve_policy(42)
+        assert resolve_policy(PerSccModel()).name == "dswp"
+
+
+class TestParallelizeEntryValidation:
+    @pytest.mark.parametrize("bad", (0, -1, -100, True, 2.5, "4"))
+    def test_rejects_non_positive_or_non_int_chunk_limit(self, bad):
+        with pytest.raises(ValueError, match="chunk_limit"):
+            parallelize(skew_stencil(), chunk_limit=bad)
+
+    def test_rejects_unknown_policy_before_any_analysis(self):
+        with pytest.raises(ValueError, match="scc_policy"):
+            parallelize(skew_stencil(), scc_policy="wavefrontish")
+
+    def test_valid_knobs_accepted_on_every_backend(self):
+        for backend in ("threaded", "wavefront"):
+            rep = parallelize(
+                skew_stencil(), backend=backend, chunk_limit=2,
+                scc_policy="chunk",
+            )
+            assert rep.chunk_limit == 2
+
+
+# ---------------------------------------------------------------------- #
+# Differential: every strategy bit-equal on both fast backends
+# ---------------------------------------------------------------------- #
+
+STRATEGY_PROGRAMS = [
+    ("skew_stencil", skew_stencil(5, 6)),
+    ("wide_serialized", wide_serialized(4, 9)),
+    ("unskewable", unskewable(4, 11)),
+]
+
+
+class TestStrategyDifferential:
+    @pytest.mark.parametrize("policy", ("chunk", "skew", "dswp"))
+    @pytest.mark.parametrize(
+        "name,prog", STRATEGY_PROGRAMS, ids=[n for n, _ in STRATEGY_PROGRAMS]
+    )
+    def test_forced_strategy_bit_equal_fast_backends(self, name, prog, policy):
+        """ISSUE acceptance: a Δ=(1,-1)-style skewable recurrence (and the
+        rest of the zoo) runs bit-equal to the sequential oracle on
+        wavefront AND xla under every forced strategy."""
+
+        from repro.compile import run_xla
+
+        rep = parallelize(
+            prog, method="isd", backend="wavefront", scc_policy=policy
+        )
+        out_wf = run_wavefront(
+            rep.optimized_sync, schedule=rep.wavefront, compare=True
+        )
+        assert out_wf.matches_sequential, ("wavefront", name, policy)
+        out_xla = run_xla(
+            rep.optimized_sync, schedule=rep.wavefront, compare=True
+        )
+        assert out_xla.matches_sequential, ("xla", name, policy)
+
+    def test_auto_policy_through_full_oracle_matrix(self):
+        assert_equivalent(wide_serialized(4, 7), methods=("none", "isd"))
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_seeded_random_forced_skew_bit_equal(self, seed):
+        """Random cyclic programs under forced skew (with chunk fallback
+        where infeasible) must stay bit-equal on the NumPy backend."""
+
+        rng = random.Random(seed)
+        stmts = []
+        arrays = ["a", "b", "c"]
+        for k in range(rng.randint(1, 3)):
+            reads = tuple(
+                ArrayRef(
+                    rng.choice(arrays),
+                    (-rng.randint(0, 1), rng.randint(-2, 2)),
+                )
+                for _ in range(rng.randint(1, 3))
+            )
+            stmts.append(
+                Statement(
+                    f"S{k+1}", ArrayRef(rng.choice(arrays), (0, 0)), reads
+                )
+            )
+        prog = LoopProgram(
+            statements=tuple(stmts),
+            bounds=((0, rng.randint(3, 4)), (0, rng.randint(3, 5))),
+        )
+        for policy in ("skew", "dswp"):
+            rep = parallelize(
+                prog, method="isd", backend="wavefront", scc_policy=policy
+            )
+            out = run_wavefront(
+                rep.optimized_sync, schedule=rep.wavefront, compare=True
+            )
+            assert out.matches_sequential, (seed, policy)
+
+    @given(st.integers(min_value=0, max_value=10**9))
+    @settings(
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_property_cost_model_choice_matches_oracle(self, seed):
+        rng = random.Random(seed)
+        ni, nj = rng.randint(3, 5), rng.randint(3, 6)
+        prog = wide_serialized(ni, nj) if seed % 2 else skew_stencil(ni, nj)
+        rep = parallelize(prog, method="isd", backend="wavefront")
+        out = run_wavefront(rep.optimized_sync, schedule=rep.wavefront)
+        assert out.matches_sequential
+
+
+# ---------------------------------------------------------------------- #
+# Schedule geometry under skew
+# ---------------------------------------------------------------------- #
+
+class TestSkewGeometry:
+    def test_skew_depth_beats_chunk_depth_on_wide_inner_dim(self):
+        prog = wide_serialized(6, 48)
+        wf_auto = parallelize(
+            prog, method="isd", backend="wavefront"
+        ).wavefront
+        wf_chunk = parallelize(
+            prog, method="isd", backend="wavefront", scc_policy="chunk"
+        ).wavefront
+        assert wf_auto.scc.recurrences[0].strategy == "skew"
+        # chunk=1 serializes all iterations; skew is a diagonal wavefront
+        assert wf_chunk.depth == 6 * 48
+        assert wf_auto.depth < wf_chunk.depth / 2
+
+    def test_skew_schedule_covers_every_instance_exactly_once(self):
+        prog = wide_serialized(5, 13)
+        wf = parallelize(prog, method="isd", backend="wavefront").wavefront
+        seen = [
+            it for level in wf.levels for g in level for it in g.iterations
+        ]
+        assert len(seen) == len(set(seen)) == 5 * 13
+
+    def test_every_dep_edge_strictly_increases_level_under_skew(self):
+        prog = wide_serialized(5, 9)
+        rep = parallelize(
+            prog, method="isd", backend="wavefront", scc_policy="skew"
+        )
+        wf = rep.wavefront
+        lvl = wf.level_of()
+        for d in wf.retained:
+            for it in prog.iterations():
+                dst = tuple(x + dd for x, dd in zip(it, d.distance))
+                if (d.sink, dst) in lvl:
+                    assert lvl[(d.source, it)] < lvl[(d.sink, dst)]

@@ -106,16 +106,17 @@ class TestTarjan:
 class TestRecurrenceClassification:
     def test_skew_chunk_is_min_carried_linearized_distance(self):
         prog = skew_stencil(6, 5)
-        part = analyze_sccs(prog, carried(prog))
+        part = analyze_sccs(prog, carried(prog), scc_policy="chunk")
         (rec,) = part.recurrences
         # distance (1,-1) linearizes to inner_extent - 1 = 4
         assert rec.chunk == rec.carried_min == 4
         assert rec.statements == ("S1",)
         assert rec.cyclic
+        assert rec.strategy == "chunk"
 
     def test_mixed_cycle_chunk_one(self):
         prog = mixed_cycle()
-        part = analyze_sccs(prog, carried(prog))
+        part = analyze_sccs(prog, carried(prog), scc_policy="chunk")
         (rec,) = part.recurrences
         assert set(rec.statements) == {"S1", "S2"}
         # the (0,1) dependence forces fully sequential chunks
@@ -123,11 +124,12 @@ class TestRecurrenceClassification:
 
     def test_chunk_limit_knob_caps_but_never_zero(self):
         prog = skew_stencil(6, 9)
-        part = analyze_sccs(prog, carried(prog), chunk_limit=3)
+        carried_deps = carried(prog)
+        part = analyze_sccs(prog, carried_deps, chunk_limit=3, scc_policy="chunk")
         assert part.recurrences[0].chunk == 3
-        part = analyze_sccs(prog, carried(prog), chunk_limit=100)
+        part = analyze_sccs(prog, carried_deps, chunk_limit=100, scc_policy="chunk")
         assert part.recurrences[0].chunk == 8  # capped by carried_min
-        part = analyze_sccs(prog, carried(prog), chunk_limit=0)
+        part = analyze_sccs(prog, carried_deps, chunk_limit=0, scc_policy="chunk")
         assert part.recurrences[0].chunk == 1
 
     def test_dswp_free_orders_force_sequential_chunks(self):
@@ -215,7 +217,10 @@ class TestHybridLayering:
                         assert lvl[(d.source, it)] < lvl[(d.sink, dst)]
 
     def test_chunk_widths_bounded_by_chunk_size(self):
-        wf = schedule_levels(skew_stencil(6, 5), carried(skew_stencil(6, 5)))
+        wf = schedule_levels(
+            skew_stencil(6, 5), carried(skew_stencil(6, 5)),
+            scc_policy="chunk",
+        )
         (rec,) = wf.scc.recurrences
         assert wf.max_width <= rec.chunk
         assert wf.instances == 6 * 5
@@ -225,7 +230,7 @@ class TestHybridLayering:
         depth stays near the chunk count instead of doubling."""
 
         prog = skew_pipeline(8, 9)
-        wf = schedule_levels(prog, carried(prog))
+        wf = schedule_levels(prog, carried(prog), scc_policy="chunk")
         (rec,) = wf.scc.recurrences
         n_chunks = -(-72 // rec.chunk)
         assert wf.depth <= n_chunks + 2  # pipelined
