@@ -54,6 +54,11 @@ engine, repro.core.scc / repro.core.policy):
                               carried dep pins chunks to 1: the cost model
                               must pick the unimodular skew and beat forced
                               chunking (ratio-gated: skew/chunk)
+  xla_policy_backend_aware    ONE SyncPlan compiled for wavefront AND xla:
+                              the backend level_cost hooks pick different
+                              strategies for the same SCC (skew vs chunk),
+                              both bit-equal to the oracle; summaries ride
+                              the SYNC_REPORTS artifact (backend_aware_*)
 """
 
 from __future__ import annotations
@@ -176,7 +181,7 @@ def bench_elim_pattern_alg6() -> None:
 def bench_elim_scaling() -> None:
     import random
 
-    from repro.core import ArrayRef, LoopProgram, Statement, parallelize
+    from repro.core import ArrayRef, LoopProgram, Statement, plan
 
     rng = random.Random(0)
     arrays = ["a", "b", "c", "d", "e"]
@@ -192,7 +197,7 @@ def bench_elim_scaling() -> None:
             stmts.append(Statement(f"S{k+1}", ArrayRef(arrays[k % 5], 0), reads))
         prog = LoopProgram(statements=tuple(stmts), bounds=((1, 9),))
         t0 = time.perf_counter()
-        rep = parallelize(prog, method="both")
+        rep = plan(prog, method="both").compile("threaded").report()
         t_us.append((time.perf_counter() - t0) * 1e6)
         total_deps += rep.summary()["loop_carried"]
         total_elim += rep.summary()["eliminated"]
@@ -209,9 +214,9 @@ def bench_wavefront_speedup() -> None:
     loop at 1024 iterations: wall time, runtime sync ops (naive/optimized)
     and the wavefront's barrier count (its only synchronization)."""
 
-    from repro.core import parallelize, paper_alg6, run_threaded, run_wavefront
+    from repro.core import paper_alg6, plan, run_threaded, run_wavefront
 
-    rep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+    rep = plan(paper_alg6(1025), method="isd").compile("wavefront").report()
     t0 = time.perf_counter()
     run_threaded(rep.optimized_sync, compare=False, timeout=120.0)
     t_threaded = time.perf_counter() - t0
@@ -240,7 +245,7 @@ def bench_wavefront_parallel_loop() -> None:
     """A dependence-free (DOALL) 1024-iteration loop: the wavefront collapses
     to depth == #statements with iteration-wide batches."""
 
-    from repro.core import ArrayRef, LoopProgram, Statement, parallelize, run_wavefront
+    from repro.core import ArrayRef, LoopProgram, Statement, plan, run_wavefront
 
     prog = LoopProgram(
         statements=(
@@ -249,7 +254,7 @@ def bench_wavefront_parallel_loop() -> None:
         ),
         bounds=((0, 1024),),
     )
-    rep = parallelize(prog, method="isd", backend="wavefront")
+    rep = plan(prog, method="isd").compile("wavefront").report()
     us = _timeit(
         lambda: run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False),
         n=3,
@@ -270,10 +275,10 @@ def bench_xla_vs_wavefront() -> None:
     load inflates both sides equally instead of flipping the ratio."""
 
     from repro.compile import run_xla
-    from repro.core import parallelize, paper_alg6, run_wavefront
+    from repro.core import paper_alg6, plan, run_wavefront
 
-    rep = parallelize(paper_alg6(1025), method="isd", backend="xla")
-    wrep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+    rep = plan(paper_alg6(1025), method="isd").compile("xla").report()
+    wrep = plan(paper_alg6(1025), method="isd").compile("wavefront").report()
     fn_xla = lambda: run_xla(rep.optimized_sync, compare=False)
     fn_np = lambda: run_wavefront(
         wrep.optimized_sync, schedule=wrep.wavefront, compare=False
@@ -304,10 +309,10 @@ def bench_compile_cache_cold_warm() -> None:
     hit) cost of the xla path, plus the counters after the sequence."""
 
     from repro.compile import clear_compile_cache, compile_cache_stats, run_xla
-    from repro.core import parallelize, paper_alg6
+    from repro.core import paper_alg6, plan
 
     clear_compile_cache()
-    rep = parallelize(paper_alg6(257), method="isd", backend="xla")
+    rep = plan(paper_alg6(257), method="isd").compile("xla").report()
     t0 = time.perf_counter()
     run_xla(rep.optimized_sync, compare=False)
     cold_us = (time.perf_counter() - t0) * 1e6
@@ -366,12 +371,10 @@ def bench_cyclic_recurrence() -> None:
     hybrid/threaded ratio."""
 
     from repro.compile import run_xla
-    from repro.core import parallelize, run_threaded, run_wavefront
+    from repro.core import plan, run_threaded, run_wavefront
 
     prog = _skew_recurrence_program(64, 16)  # 1024 iterations, chunk 15
-    rep = parallelize(
-        prog, method="isd", backend="wavefront", scc_policy="chunk"
-    )
+    rep = plan(prog, method="isd").compile("wavefront", scc_policy="chunk").report()
     (rec,) = rep.wavefront.scc.recurrences
     # min-of-3: the 1024-thread spawn storm is the ratio's noisy side
     t_threaded = float("inf")
@@ -409,7 +412,7 @@ def bench_scc_hybrid_pipeline() -> None:
     right behind each producer chunk (depth ≈ chunks + 2), instead of the
     blocked 2×chunks a run-SCCs-to-completion scheduler would produce."""
 
-    from repro.core import ArrayRef, LoopProgram, Statement, parallelize, run_wavefront
+    from repro.core import ArrayRef, LoopProgram, Statement, plan, run_wavefront
 
     prog = LoopProgram(
         statements=(
@@ -418,9 +421,7 @@ def bench_scc_hybrid_pipeline() -> None:
         ),
         bounds=((0, 64), (0, 17)),
     )
-    rep = parallelize(
-        prog, method="isd", backend="wavefront", scc_policy="chunk"
-    )
+    rep = plan(prog, method="isd").compile("wavefront", scc_policy="chunk").report()
     us = _best_of(
         lambda: run_wavefront(
             rep.optimized_sync, schedule=rep.wavefront, compare=False
@@ -465,16 +466,14 @@ def bench_skew_vs_chunk_wide() -> None:
     measured in this process back to back, so the gate judges the
     skew/chunk ratio — runner speed cancels exactly."""
 
-    from repro.core import parallelize, run_wavefront
+    from repro.core import plan, run_wavefront
 
     # 8192 iterations, inner dimension 128 wide; the (0,1) dep serializes
     # chunked execution into 8192 unit chunks while the skew wavefronts
     # stay ~32 instances wide
     prog = _wide_serialized_recurrence(64, 128)
-    rep_auto = parallelize(prog, method="isd", backend="wavefront")
-    rep_chunk = parallelize(
-        prog, method="isd", backend="wavefront", scc_policy="chunk"
-    )
+    rep_auto = plan(prog, method="isd").compile("wavefront").report()
+    rep_chunk = plan(prog, method="isd").compile("wavefront", scc_policy="chunk").report()
     (rec,) = rep_auto.wavefront.scc.recurrences
     skew_us = _best_of(
         lambda: run_wavefront(
@@ -501,10 +500,49 @@ def bench_skew_vs_chunk_wide() -> None:
     )
 
 
-def bench_executor_sync_ops() -> None:
-    from repro.core import parallelize, paper_alg6, run_threaded
+def bench_xla_policy_backend_aware() -> None:
+    """Backend-aware cost-model acceptance: ONE SyncPlan, two backends, two
+    *different* strategies for the same recurrence SCC — the NumPy
+    interpreter (cost = depth × groups) skews the scan; the compiled level
+    loop (``repro.compile.xla_level_cost``: near-flat step cost + padded
+    lane width) chunks it, because the skewed diagonals pad to 64 lanes.
+    Both choices are asserted bit-equal to the sequential oracle; the row's
+    ratio is warm xla / warm wavefront (same process, runner speed
+    cancels).  The report summaries of both compiles ride the SYNC_REPORTS
+    artifact (collect_reports: backend_aware_40x96_*)."""
 
-    rep = parallelize(paper_alg6(10), method="isd")
+    from repro.core import plan, run_sequential
+
+    prog = _wide_serialized_recurrence(40, 96)
+    p = plan(prog, method="isd")
+    exe_wf = p.compile("wavefront")
+    exe_xla = p.compile("xla")
+    (rec_wf,) = exe_wf.report().summary()["scc"]["recurrences"]
+    (rec_xla,) = exe_xla.report().summary()["scc"]["recurrences"]
+    assert (rec_wf["strategy"], rec_xla["strategy"]) == ("skew", "chunk"), (
+        "backend-aware divergence lost",
+        rec_wf["strategy"],
+        rec_xla["strategy"],
+    )
+    init = prog.initial_store()
+    oracle = run_sequential(prog, init)
+    assert exe_wf.run(store=init) == oracle, "wavefront diverged from oracle"
+    assert exe_xla.run(store=init) == oracle, "xla diverged from oracle"
+    wf_us = _best_of(lambda: exe_wf.run(store=init), n=7)
+    xla_us = _best_of(lambda: exe_xla.run(store=init), n=7)
+    _row(
+        "xla_policy_backend_aware",
+        xla_us,
+        f"wavefront={rec_wf['strategy']} xla={rec_xla['strategy']} "
+        f"wf_us={wf_us:.0f} xla_us={xla_us:.0f} both_bit_equal=True",
+        ratio=xla_us / wf_us,
+    )
+
+
+def bench_executor_sync_ops() -> None:
+    from repro.core import paper_alg6, plan, run_threaded
+
+    rep = plan(paper_alg6(10), method="isd").compile("threaded").report()
     naive = run_threaded(rep.naive_sync)
     opt = run_threaded(rep.optimized_sync)
     assert naive.matches_sequential and opt.matches_sequential
@@ -636,6 +674,7 @@ BENCHES = [
     bench_cyclic_recurrence,
     bench_scc_hybrid_pipeline,
     bench_skew_vs_chunk_wide,
+    bench_xla_policy_backend_aware,
     bench_pp_schedule,
     bench_kernel_pipeline,
     bench_grad_sync_batching,
@@ -779,25 +818,40 @@ def collect_reports() -> Dict[str, dict]:
     diffable across PRs without re-running anything.
     """
 
-    from repro.core import parallelize, paper_alg4, paper_alg6
+    from repro.core import paper_alg4, paper_alg6, plan
 
     programs = {
-        "alg6_1025_isd": (paper_alg6(1025), {}),
-        "alg4_cyclic_isd": (paper_alg4(64), {}),
-        "skew_recurrence_64x16_auto": (_skew_recurrence_program(64, 16), {}),
+        "alg6_1025_isd": (paper_alg6(1025), "wavefront", {}),
+        "alg4_cyclic_isd": (paper_alg4(64), "wavefront", {}),
+        "skew_recurrence_64x16_auto": (
+            _skew_recurrence_program(64, 16), "wavefront", {},
+        ),
         "skew_recurrence_64x16_chunk": (
             _skew_recurrence_program(64, 16),
+            "wavefront",
             {"scc_policy": "chunk"},
         ),
-        "wide_serialized_8x128_auto": (_wide_serialized_recurrence(8, 128), {}),
+        "wide_serialized_8x128_auto": (
+            _wide_serialized_recurrence(8, 128), "wavefront", {},
+        ),
         "wide_serialized_8x128_chunk": (
             _wide_serialized_recurrence(8, 128),
+            "wavefront",
             {"scc_policy": "chunk"},
+        ),
+        # the xla_policy_backend_aware bench program under BOTH backends:
+        # the per-backend strategy divergence (wavefront skews, xla chunks)
+        # is exactly what this artifact makes diffable across PRs
+        "backend_aware_40x96_wavefront": (
+            _wide_serialized_recurrence(40, 96), "wavefront", {},
+        ),
+        "backend_aware_40x96_xla": (
+            _wide_serialized_recurrence(40, 96), "xla", {},
         ),
     }
     out: Dict[str, dict] = {}
-    for name, (prog, kwargs) in programs.items():
-        rep = parallelize(prog, method="isd", backend="wavefront", **kwargs)
+    for name, (prog, backend, kwargs) in programs.items():
+        rep = plan(prog, method="isd").compile(backend, **kwargs).report()
         out[name] = rep.summary()
     return out
 

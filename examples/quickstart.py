@@ -5,16 +5,45 @@
 Walks Alg.1 → Alg.3 (fission), Alg.4 → Alg.5 (send/wait insertion), and the
 Alg.6/Fig.6 synchronization elimination, executing everything on real
 threads and validating against sequential semantics.
+
+The compiler entry point is the *staged* pipeline::
+
+    options = PlanOptions(method="isd")          # typed, validated knobs
+    p       = plan(prog, options)                # analysis runs ONCE
+    exe     = p.compile("wavefront")             # schedule for one machine
+    store   = exe.run()                          # uniform run contract
+    report  = exe.report()                       # the familiar report
+
+Migration from the legacy one-shot call:
+
+    ===================================================  =========================================================
+    before                                               after
+    ===================================================  =========================================================
+    parallelize(prog, method=m)                          plan(prog, method=m).compile("threaded").report()
+    parallelize(prog, method=m, backend=b)               plan(prog, method=m).compile(b).report()
+    parallelize(prog, ..., scc_policy=s, chunk_limit=c)  plan(prog, ...).compile(b, scc_policy=s, chunk_limit=c)
+    rep.wavefront / rep.compiled                         exe.report().wavefront / exe.artifacts["compiled"]
+    ===================================================  =========================================================
+
+``parallelize()`` survives as a shim with bit-identical reports, but warns:
+it re-runs the whole analysis per call, where a plan is computed once and
+compiled for any number of backends — each applying its own capability
+contract and cost model (step 3b below shows wavefront and xla choosing
+different schedules for one plan).
 """
 
 from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    PlanOptions,
     StageGraph,
+    Statement,
     analyze,
     fission,
     paper_alg1,
     paper_alg4,
     paper_alg6,
-    parallelize,
+    plan,
     plan_pipeline_sync,
     run_threaded,
 )
@@ -49,9 +78,10 @@ def main() -> None:
 
     print()
     print("=" * 70)
-    print("3. Alg.6: synchronization elimination (Fig. 6)")
+    print("3. Alg.6: synchronization elimination (Fig. 6), staged pipeline")
     print("=" * 70)
-    rep = parallelize(paper_alg6(8), method="isd")
+    p = plan(paper_alg6(8), PlanOptions(method="isd"))  # analysis runs ONCE
+    rep = p.compile("threaded").report()
     print("  summary:", rep.summary())
     for dep, path in rep.elimination.witnesses.items():
         chain = " -> ".join(f"{s}({i[0]})" for s, i in path)
@@ -62,18 +92,46 @@ def main() -> None:
         f"  threaded execution matches sequential: {run.matches_sequential} "
         f"(waits={run.stats.waits}, sends={run.stats.sends})"
     )
+    # the SAME plan compiles for the fast NumPy backend — no re-analysis
+    wf = p.compile("wavefront").report().wavefront
+    print(
+        f"  wavefront compile of the same plan: depth={wf.depth} "
+        f"(batched_ops={wf.batched_ops})"
+    )
+
+    print()
+    print("=" * 70)
+    print("3b. One plan, per-backend schedules (capability cost hooks)")
+    print("=" * 70)
+    # {(0,1), (1,-1)} recurrence: the (0,1) carried dep pins DOACROSS
+    # chunks to 1, so the NumPy interpreter (cost = depth x groups) skews;
+    # the compiled level loop pays per padded lane width and chunks instead.
+    rec = LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, 5), (0, 16)),
+    )
+    p2 = plan(rec, PlanOptions(method="isd"))
+    for backend in ("wavefront", "xla"):
+        (r,) = p2.compile(backend).report().summary()["scc"]["recurrences"]
+        print(f"  {backend:<10s} strategy={r['strategy']}")
 
     print()
     print("=" * 70)
     print("4. The same optimizer on a pipeline-parallel stage graph")
     print("=" * 70)
-    plan = plan_pipeline_sync(
+    pp_plan = plan_pipeline_sync(
         StageGraph(num_stages=6, num_microbatches=4, skips=((0, 2), (0, 3), (0, 4)))
     )
-    print("  plan:", plan.summary())
+    print("  plan:", pp_plan.summary())
     print(
         "  retained events:",
-        [(e.src_stmt, e.dst_stmt) for e in plan.events],
+        [(e.src_stmt, e.dst_stmt) for e in pp_plan.events],
     )
 
 

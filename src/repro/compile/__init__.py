@@ -40,6 +40,7 @@ _LAZY = {
     "CompiledProgram": "repro.compile.lowering",
     "XlaLoweringError": "repro.compile.lowering",
     "XlaReport": "repro.compile.executor",
+    "execute_compiled": "repro.compile.executor",
     "run_xla": "repro.compile.executor",
 }
 
@@ -51,7 +52,11 @@ if TYPE_CHECKING:  # pragma: no cover - typing aid only
         compile_cache_stats,
         get_or_compile,
     )
-    from repro.compile.executor import XlaReport, run_xla  # noqa: F401
+    from repro.compile.executor import (  # noqa: F401
+        XlaReport,
+        execute_compiled,
+        run_xla,
+    )
     from repro.compile.lowering import (  # noqa: F401
         CompiledProgram,
         XlaLoweringError,
@@ -65,33 +70,96 @@ def __getattr__(name: str):
     return getattr(importlib.import_module(mod), name)
 
 
+# ---------------------------------------------------------------------- #
+# Backend capability: the xla cost hook.  Import-light on purpose (no jax,
+# no numpy) — the core report path consults it through
+# BackendSpec.level_cost without touching the heavy lowering machinery.
+# ---------------------------------------------------------------------- #
+
+# flat per-step overhead of one compiled band step, in padded-lane units.
+# Measured shape (ROADMAP "XLA band-step cost vs lane width"): a chunk=1
+# band costs ~1.5µs/step and the per-step cost grows roughly linearly with
+# the padded lane width, with the flat dispatch share worth about one lane.
+XLA_STEP_LANE_UNITS = 1.0
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def xla_level_cost(plan, ctx) -> float:
+    """Per-SCC cost of a strategy offer *on the compiled level loop*.
+
+    The NumPy interpreter pays per level dispatched, so the default cost
+    model scores depth × statement groups.  The jitted ``lax.fori_loop``
+    instead pays per level a near-flat step cost plus work proportional to
+    the *padded* lane width of each statement's table row — so a skewed
+    wavefront whose widest diagonal pads to 64 lanes loses its depth
+    advantage against narrow sequential chunks (the open item this hook
+    closes).  Cost model: ``depth × statements × (flat + next_pow2(width))``.
+    """
+
+    width = plan.max_width if plan.max_width else max(1, round(plan.width))
+    lanes = _next_pow2(max(1, int(width)))
+    return float(plan.depth) * len(ctx.statements) * (
+        XLA_STEP_LANE_UNITS + lanes
+    )
+
+
 __all__ = sorted(
-    ["compute_fingerprint", "program_fingerprint", "structural_key", *_LAZY]
+    [
+        "compute_fingerprint",
+        "program_fingerprint",
+        "structural_key",
+        "xla_level_cost",
+        *_LAZY,
+    ]
 )
 
 
 # ---------------------------------------------------------------------- #
-# Backend registration: parallelize(..., backend="xla").  The callables
-# defer jax-heavy imports until the backend is actually exercised.
+# Backend registration: plan(...).compile("xla") / parallelize(...,
+# backend="xla").  The callables defer jax-heavy imports until the backend
+# is actually exercised.
 # ---------------------------------------------------------------------- #
 
-def _xla_prepare(optimized, retained, **options):
+def _xla_prepare(
+    optimized,
+    retained,
+    *,
+    chunk_limit=None,
+    scc_policy=None,
+    model="doall",
+    processors=None,
+):
     from repro.compile.cache import get_or_compile
 
-    compiled, _hit = get_or_compile(
+    compiled, hit = get_or_compile(
         optimized.program,
         tuple(retained),
-        model="doall",
-        chunk_limit=options.get("chunk_limit"),
-        scc_policy=options.get("scc_policy"),
+        model=model,
+        processors=processors,
+        chunk_limit=chunk_limit,
+        scc_policy=scc_policy,
     )
-    return {"compiled": compiled}
+    # compile_hit stays on Executable.artifacts (it is per-compile-call
+    # provenance, not a report field)
+    return {"compiled": compiled, "compile_hit": hit}
 
 
 def _xla_differential(sync, *, store=None, stalls=None):
     from repro.compile.executor import run_xla
 
     return run_xla(sync, store=store, compare=False).store
+
+
+def _xla_run(sync, artifacts, *, store=None, stalls=None):
+    from repro.compile.executor import execute_compiled, run_xla
+
+    compiled = artifacts.get("compiled")
+    if compiled is None:  # prepared elsewhere: resolve through the cache
+        return run_xla(sync, store=store, compare=False).store
+    return execute_compiled(compiled, sync, store=store)
 
 
 def _register() -> None:
@@ -101,7 +169,10 @@ def _register() -> None:
         BackendSpec(
             name="xla",
             prepare=_xla_prepare,
+            accepts=("chunk_limit", "scc_policy", "model", "processors"),
+            level_cost=xla_level_cost,
             differential=_xla_differential,
+            run=_xla_run,
             description=(
                 "structurally cached jitted XLA level loop "
                 "(repro.compile; one artifact per dependence structure)"

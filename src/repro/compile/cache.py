@@ -23,6 +23,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram
+from repro.core.policy import SccPolicyLike
 from repro.compile.structure import structural_key
 
 
@@ -93,7 +94,7 @@ class CompileCache:
         model: str = "doall",
         processors: Optional[Dict[str, object]] = None,
         chunk_limit: Optional[int] = None,
-        scc_policy: object = None,
+        scc_policy: SccPolicyLike = None,
     ) -> Tuple["CompiledProgram", bool]:
         """Resolve (or build) the artifact for this structure.
 
@@ -144,7 +145,7 @@ def get_or_compile(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
 ) -> Tuple["CompiledProgram", bool]:
     """Module-level convenience over the process-global cache."""
 

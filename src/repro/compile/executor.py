@@ -14,6 +14,7 @@ import dataclasses
 from typing import Dict, Mapping, Optional
 
 from repro.core.ir import run_sequential
+from repro.core.policy import SccPolicyLike
 from repro.core.sync import SyncProgram
 from repro.core.wavefront import (
     WavefrontSchedule,
@@ -22,6 +23,30 @@ from repro.core.wavefront import (
     _sync_dependences,
 )
 from repro.compile.cache import GLOBAL_CACHE, CompileCache
+
+
+def execute_compiled(
+    compiled,
+    sync: SyncProgram,
+    *,
+    store: Optional[Mapping[str, dict]] = None,
+) -> dict:
+    """Run an already-resolved :class:`CompiledProgram` and return the store.
+
+    The :class:`~repro.core.parallelizer.Executable` runner for the xla
+    backend: no structural-cache lookup (the artifact is in hand), only the
+    per-(bounds, layout) table cache and jax's jit cache underneath — which
+    is what makes ``plan once, compile once, run many`` the warm path.
+    """
+
+    prog = sync.program
+    init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
+    dense = _DenseStore(init)
+    case, table_hit = compiled.prepare(prog, dense)
+    if compiled.cache is not None:
+        compiled.cache.note_tables(table_hit)
+    compiled.execute(case, dense)
+    return dense.to_dicts()
 
 
 @dataclasses.dataclass
@@ -47,7 +72,7 @@ def run_xla(
     processors: Optional[Dict[str, object]] = None,
     cache: Optional[CompileCache] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
 ) -> XlaReport:
     """Execute ``sync`` through the structural compile cache.
 

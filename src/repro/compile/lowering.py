@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram
+from repro.core.policy import SccPolicyLike
 from repro.core.wavefront import (
     WavefrontSchedule,
     WavefrontStats,
@@ -76,8 +77,9 @@ class XlaLoweringError(ValueError):
     """The program cannot be lowered to XLA (e.g. untraceable compute fn)."""
 
 
-def _next_pow2(n: int) -> int:
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+# one rounding convention for table padding AND the cost model's padded-lane
+# estimate (repro.compile.xla_level_cost) — they must never drift apart
+from repro.compile import _next_pow2  # noqa: E402
 
 
 # ---------------------------------------------------------------------- #
@@ -304,7 +306,7 @@ class CompiledProgram:
         model: str = "doall",
         processors: Optional[Dict[str, object]] = None,
         chunk_limit: Optional[int] = None,
-        scc_policy: object = None,
+        scc_policy: SccPolicyLike = None,
     ) -> None:
         import collections
         import threading
@@ -428,6 +430,13 @@ class CompiledProgram:
             raise KeyError(
                 f"store is missing arrays {missing} referenced by the program"
             )
+        # schedule under the compiled backend's own step-cost model: the
+        # default scheduling policy scores strategies through
+        # xla_level_cost, so the same "auto" knob can resolve to chunk here
+        # while the NumPy interpreter resolves it to skew (forced strategies
+        # and explicit policy instances are untouched by the hook)
+        from repro.compile import xla_level_cost
+
         sched = schedule_levels(
             program,
             list(self.retained),
@@ -435,6 +444,7 @@ class CompiledProgram:
             processors=self.processors,
             chunk_limit=self.chunk_limit,
             scc_policy=self.scc_policy,
+            level_cost=xla_level_cost,
         )
         n_levels = sched.depth
         arrays = tuple(sorted(dense.data))

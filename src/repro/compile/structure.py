@@ -50,6 +50,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.dependence import Dependence
 from repro.core.ir import ArrayRef, LoopProgram
+from repro.core.policy import SccPolicyLike
 
 _PRIMITIVES = (int, float, bool, str, bytes, type(None))
 
@@ -101,6 +102,11 @@ def _const_fp(value: object, _seen: frozenset = frozenset()) -> object:
             tuple(getattr(value, "shape", ())),
             hashlib.sha256(tobytes()).hexdigest(),
         )
+    if callable(value):
+        # callables captured as instance state (e.g. a policy's level_cost
+        # hook) key by behavior: two distinct lambdas share the qualname
+        # "<lambda>", which _object_fp would collide
+        return compute_fingerprint(value, _seen=_seen)
     return _object_fp(value, _seen)
 
 
@@ -323,7 +329,7 @@ def structural_key(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
 ) -> str:
     """The compile-cache key: hash of (statement graph, retained dependence
     set, execution model, SCC partition incl. bounds-free skew candidates,

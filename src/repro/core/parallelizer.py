@@ -5,25 +5,46 @@
   3. insert synchronization for every loop-carried dependence;
   4. eliminate partial dependences and optimize the sync instructions.
 
-:func:`parallelize` composes the whole flow and reports before/after sync
-counts — the framework's public compiler entry point, also used by the
-pipeline-schedule lift (:mod:`repro.core.schedule`) and the Pallas kernel
-schedule generator.
+The public surface is a *staged* pipeline mirroring that structure:
+
+  * :class:`PlanOptions` — a frozen, validated, hashable bundle of the
+    analysis knobs (``method``/``deps``/``merge_sends``/``chunk_limit``/
+    ``scc_policy``/``model``/``processors``);
+  * :func:`plan` — runs steps 1–4 exactly once and returns a
+    :class:`SyncPlan`, the backend-independent artifact (dependences,
+    fission, naive and optimized sync, elimination with witnesses, retained
+    validation);
+  * :meth:`SyncPlan.compile` — targets one registered backend, checking the
+    requested options against the backend's *capability contract*
+    (:attr:`BackendSpec.accepts`; unknown options raise ``ValueError``
+    instead of being silently dropped) and consulting its cost hook
+    (:attr:`BackendSpec.level_cost`) so the same plan can schedule
+    differently per machine;
+  * :class:`Executable` — a uniform ``run(store=None, stalls=None)`` /
+    ``report()`` contract across threaded / wavefront / xla.
+
+:func:`parallelize` survives as a thin compatibility shim over
+``plan(...).compile(...).report()`` — bit-identical reports, same structural
+compile-cache keys — and emits a ``DeprecationWarning`` so in-repo call
+sites stay on the staged API (the fast CI job escalates that warning to an
+error).
 
 Execution backends are a *registry* (:func:`register_backend`), not a fixed
-tuple: each :class:`BackendSpec` knows how to prepare backend-specific report
-artifacts at parallelize time and how to execute a SyncProgram for the
+tuple: each :class:`BackendSpec` knows how to prepare backend-specific
+artifacts at compile time and how to execute a SyncProgram for the
 differential harness (``tests/oracle.py`` iterates every registered backend,
 so a new backend is differentially tested with zero per-test changes).
 Built-ins: ``threaded`` (the paper's send/wait machine), ``wavefront`` (the
 NumPy level interpreter), and — loaded lazily from :mod:`repro.compile` —
-``xla`` (the structurally cached jitted level loop).
+``xla`` (the structurally cached jitted level loop, whose
+``level_cost`` hook models its near-flat narrow-band step cost).
 
 Because steps 1–4 depend on the statement graph but not the loop bounds (the
 elimination window is derived from dependence distances), the expensive
-elimination result is memoized per (statement graph, lower bounds, method):
-repeated requests with the same structure — the serving path re-planning its
-decode loop each batch wave — skip re-analysis entirely.
+elimination result is memoized per (statement graph, lower bounds, deps,
+method, execution model): repeated ``plan`` requests with the same structure
+— the serving path re-planning its decode loop each batch wave — skip
+re-analysis entirely.
 """
 
 from __future__ import annotations
@@ -34,7 +55,15 @@ import dataclasses
 import functools
 import importlib
 import threading
-from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+import warnings
+from typing import (
+    Callable,
+    Dict,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 from repro.core.dependence import Dependence, analyze, loop_carried
 from repro.core.elimination import (
@@ -45,7 +74,7 @@ from repro.core.elimination import (
 from repro.core.executor import run_threaded
 from repro.core.fission import FissionResult, fission
 from repro.core.ir import LoopProgram
-from repro.core.policy import resolve_policy
+from repro.core.policy import LevelCostFn, SccPolicyLike, resolve_policy
 from repro.core.scc import validate_retained
 from repro.core.sync import SyncProgram, insert_synchronization, strip_dependences
 from repro.core.wavefront import (
@@ -61,22 +90,44 @@ from repro.core.wavefront import (
 
 @dataclasses.dataclass(frozen=True)
 class BackendSpec:
-    """One execution backend.
+    """One execution backend and its capability contract.
 
-    ``prepare(optimized_sync, retained, **options)`` runs at parallelize
-    time and returns extra :class:`ParallelizationReport` fields (e.g. the
-    wavefront schedule, the compiled artifact); ``options`` carries the
-    scheduling knobs (``chunk_limit``, ``scc_policy``) the caller passed to
-    :func:`parallelize`.  ``differential(sync, *, store, stalls=None)``
-    executes a SyncProgram and returns its final store — the hook
-    ``tests/oracle.py`` uses to bit-compare every backend against the
-    sequential oracle.
+    ``prepare(optimized_sync, retained, **options)`` runs at compile time
+    and returns extra artifacts (e.g. the wavefront schedule, the compiled
+    XLA handle); ``options`` carries the scheduling knobs the caller passed
+    through :meth:`SyncPlan.compile`.
+
+    ``accepts`` is the backend's *declared* capability contract: the option
+    names ``compile``/``parallelize`` may forward to ``prepare``.  A
+    requested option outside the contract raises ``ValueError`` naming the
+    backend and its accepted options — never a silent drop.  ``None`` means
+    "infer from the prepare signature" (the legacy-registrant default: a
+    ``prepare(optimized, retained)`` from before the knobs existed simply
+    accepts nothing, and passing it a knob is now an error rather than a
+    no-op).
+
+    ``level_cost(plan, ctx) -> float`` is the backend's per-SCC cost hook:
+    the scheduling policy engine's default cost model scores each strategy
+    offer through it, so the same :class:`SyncPlan` can pick ``chunk`` on a
+    machine with width-proportional step cost (xla) where an interpreter
+    with per-level dispatch cost (wavefront) picks ``skew``.
+
+    ``differential(sync, *, store, stalls=None)`` executes an arbitrary
+    SyncProgram and returns its final store — the hook ``tests/oracle.py``
+    uses to bit-compare every backend against the sequential oracle.
+    ``run(sync, artifacts, *, store, stalls=None)`` is the
+    :class:`Executable` runner: like ``differential`` but handed the
+    prepared artifacts so warm executions reuse the schedule / compiled
+    handle instead of re-planning.
     """
 
     name: str
     prepare: Optional[Callable[..., Dict[str, object]]] = None
     differential: Optional[Callable[..., Mapping[str, dict]]] = None
     description: str = ""
+    accepts: Optional[Tuple[str, ...]] = None
+    level_cost: Optional[LevelCostFn] = None
+    run: Optional[Callable[..., Mapping[str, dict]]] = None
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}
@@ -127,34 +178,211 @@ def execution_backends() -> Dict[str, BackendSpec]:
     }
 
 
-register_backend(
-    BackendSpec(
-        name="threaded",
-        prepare=None,
-        differential=lambda sync, *, store=None, stalls=None: run_threaded(
-            sync, stalls=stalls, store=store, compare=False
-        ).store,
-        description="one thread per iteration, send/wait only (the paper's machine)",
-    )
-)
+def backend_accepted_options(spec: BackendSpec) -> Optional[Tuple[str, ...]]:
+    """The backend's effective capability contract.
 
-register_backend(
-    BackendSpec(
-        name="wavefront",
-        prepare=lambda optimized, retained, **options: {
-            "wavefront": schedule_wavefronts(
-                optimized,
-                list(retained),
-                chunk_limit=options.get("chunk_limit"),
-                scc_policy=options.get("scc_policy"),
+    The declared :attr:`BackendSpec.accepts` wins; specs without a
+    declaration fall back to reflecting the ``prepare`` signature (a legacy
+    registrant's ``prepare(optimized, retained)`` accepts nothing; a
+    ``**kwargs`` prepare accepts everything, signalled as ``None``).
+    """
+
+    if spec.accepts is not None:
+        return tuple(spec.accepts)
+    if spec.prepare is None:
+        return ()
+    inferred = _accepted_option_names(spec.prepare)
+    if inferred is None:
+        return None  # **kwargs / un-inspectable: accepts everything
+    return tuple(sorted(inferred))
+
+
+@functools.lru_cache(maxsize=64)
+def _accepted_option_names(
+    prepare: Callable[..., Dict[str, object]]
+) -> Optional[frozenset]:
+    """Option names a ``prepare`` without a declared contract can receive.
+
+    ``None`` = accepts everything (``**kwargs`` or un-inspectable).  The
+    first two positional parameters are the pipeline artifacts (optimized
+    sync, retained deps), not options, whatever the registrant named them.
+    """
+
+    import inspect
+
+    try:
+        params = list(inspect.signature(prepare).parameters.values())
+    except (TypeError, ValueError):  # C callables etc.: assume modern
+        return None
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return None
+    names = []
+    positional_seen = 0
+    for p in params:
+        if (
+            p.kind
+            in (
+                inspect.Parameter.POSITIONAL_ONLY,
+                inspect.Parameter.POSITIONAL_OR_KEYWORD,
             )
-        },
-        differential=lambda sync, *, store=None, stalls=None: run_wavefront(
-            sync, store=store, compare=False
-        ).store,
-        description="NumPy dependence-level interpreter (O(depth) batched steps)",
-    )
-)
+            and positional_seen < 2
+        ):
+            positional_seen += 1
+            continue
+        if p.kind is inspect.Parameter.VAR_POSITIONAL:
+            continue
+        names.append(p.name)
+    return frozenset(names)
+
+
+def _check_backend_options(
+    spec: BackendSpec, options: Mapping[str, object]
+) -> None:
+    """Enforce the capability contract: unknown options are an error.
+
+    This replaces the old silent ``_accepted_options`` filter — e.g.
+    ``chunk_limit`` on ``backend="threaded"`` used to do nothing without a
+    word; now it raises naming the backend and its accepted options.
+    """
+
+    accepted = backend_accepted_options(spec)
+    if accepted is None:
+        return
+    unknown = sorted(k for k in options if k not in accepted)
+    if unknown:
+        raise ValueError(
+            f"backend {spec.name!r} does not accept option(s) "
+            f"{', '.join(repr(k) for k in unknown)}; its capability "
+            f"contract accepts {sorted(accepted) if accepted else 'no options'}"
+            " — drop the option or compile for a backend that declares it"
+        )
+
+
+# ---------------------------------------------------------------------- #
+# Option validation (shared by PlanOptions and SyncPlan.compile)
+# ---------------------------------------------------------------------- #
+
+ELIMINATION_METHODS = ("isd", "pattern", "both", "none")
+EXECUTION_MODELS = ("doall", "dswp", "procmap")
+
+# the scheduling knobs a PlanOptions forwards to ``prepare`` at compile time
+SCHEDULING_OPTION_NAMES = ("chunk_limit", "scc_policy", "model", "processors")
+
+
+def _validate_chunk_limit(chunk_limit: object) -> None:
+    if chunk_limit is not None and (
+        not isinstance(chunk_limit, int)
+        or isinstance(chunk_limit, bool)
+        or chunk_limit < 1
+    ):
+        raise ValueError(
+            f"chunk_limit must be a positive integer or None, got "
+            f"{chunk_limit!r} — a chunk of zero iterations cannot make "
+            "progress (use chunk_limit=1 for fully sequential chunks)"
+        )
+
+
+def _validate_scheduling_options(options: Mapping[str, object]) -> None:
+    """Value-validate the scheduling knobs (names are contract-checked
+    separately, per backend)."""
+
+    if "chunk_limit" in options:
+        _validate_chunk_limit(options["chunk_limit"])
+    if "scc_policy" in options:
+        resolve_policy(options["scc_policy"])  # raises with allowed values
+    if "model" in options and options["model"] not in EXECUTION_MODELS:
+        raise ValueError(
+            f"unknown execution model {options['model']!r}; expected one of "
+            f"{EXECUTION_MODELS}"
+        )
+
+
+# ---------------------------------------------------------------------- #
+# PlanOptions: the frozen, validated, hashable analysis configuration
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class PlanOptions:
+    """Typed options of the analysis stage (:func:`plan`).
+
+    Frozen and hashable so a plan request is a legitimate cache key;
+    validated eagerly in ``__post_init__`` so a bad knob fails at
+    construction with a clear message, not deep inside a scheduler.
+
+    ``method``: ``"isd"`` (transitive reduction), ``"pattern"`` (Li &
+    Abu-Sufah matching), ``"both"`` (pattern first — cheap — then ISD on the
+    survivors), or ``"none"`` (naive synchronization only).
+    ``deps``: explicit dependences; ``None`` runs the analyzer.
+    ``merge_sends``: merge compatible sends during optimized insertion.
+    ``chunk_limit``/``scc_policy``: recurrence-SCC scheduling knobs,
+    forwarded at compile time to backends whose capability contract accepts
+    them.  ``model``/``processors``: the execution model the elimination
+    (and later scheduling) assumes — ``"procmap"`` is how the Pallas K-loop
+    plan expresses its explicit two-processor pipeline.
+    """
+
+    method: str = "isd"
+    deps: Optional[Tuple[Dependence, ...]] = None
+    merge_sends: bool = False
+    chunk_limit: Optional[int] = None
+    scc_policy: SccPolicyLike = None
+    model: str = "doall"
+    processors: Optional[Tuple[Tuple[str, object], ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.deps is not None:
+            object.__setattr__(self, "deps", tuple(self.deps))
+        if isinstance(self.processors, Mapping):
+            object.__setattr__(
+                self, "processors", tuple(sorted(self.processors.items()))
+            )
+        elif self.processors is not None:
+            object.__setattr__(self, "processors", tuple(self.processors))
+        if self.method not in ELIMINATION_METHODS:
+            raise ValueError(
+                f"unknown elimination method {self.method!r}; expected one "
+                f"of {ELIMINATION_METHODS}"
+            )
+        _validate_chunk_limit(self.chunk_limit)
+        resolve_policy(self.scc_policy)  # raises with the allowed values
+        if self.model not in EXECUTION_MODELS:
+            raise ValueError(
+                f"unknown execution model {self.model!r}; expected one of "
+                f"{EXECUTION_MODELS}"
+            )
+        if self.model == "procmap" and not self.processors:
+            raise ValueError(
+                "model='procmap' requires a processors mapping "
+                "(statement name -> processor id)"
+            )
+        if self.model == "doall" and self.processors:
+            raise ValueError(
+                "processors only make sense under model='procmap'"
+            )
+        if self.model != "doall" and self.method in ("pattern", "both"):
+            raise ValueError(
+                f"method={self.method!r} implements the doall pattern "
+                "matcher only; use method='isd' for non-doall models"
+            )
+
+    # ------------------------------------------------------------------ #
+    @property
+    def processor_map(self) -> Optional[Dict[str, object]]:
+        return dict(self.processors) if self.processors else None
+
+    def scheduling_options(self) -> Dict[str, object]:
+        """The non-default scheduling knobs to forward at compile time."""
+
+        out: Dict[str, object] = {}
+        if self.chunk_limit is not None:
+            out["chunk_limit"] = self.chunk_limit
+        if self.scc_policy is not None:
+            out["scc_policy"] = self.scc_policy
+        if self.model != "doall":
+            out["model"] = self.model
+        if self.processors:
+            out["processors"] = self.processor_map
+        return out
 
 
 # ---------------------------------------------------------------------- #
@@ -184,7 +412,11 @@ def clear_analysis_cache() -> None:
 
 
 def _eliminate(
-    prog: LoopProgram, dep_list: Sequence[Dependence], method: str
+    prog: LoopProgram,
+    dep_list: Sequence[Dependence],
+    method: str,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
 ) -> EliminationResult:
     if method == "none":
         return EliminationResult(
@@ -194,7 +426,9 @@ def _eliminate(
             method="none",
         )
     if method == "isd":
-        return eliminate_transitive(prog, dep_list)
+        return eliminate_transitive(
+            prog, dep_list, model=model, processors=processors
+        )
     if method == "pattern":
         return eliminate_pattern(prog, dep_list)
     if method == "both":
@@ -210,9 +444,14 @@ def _eliminate(
 
 
 def _memoized_eliminate(
-    prog: LoopProgram, dep_list: Sequence[Dependence], method: str
+    prog: LoopProgram,
+    dep_list: Sequence[Dependence],
+    method: str,
+    model: str = "doall",
+    processors: Optional[Dict[str, object]] = None,
 ) -> EliminationResult:
-    """Elimination keyed by (statement graph, lower bounds, deps, method).
+    """Elimination keyed by (statement graph, lower bounds, deps, method,
+    execution model).
 
     The ISD window is derived from dependence distances and anchored at the
     loop *lower* bounds, so the result — including witness paths — is
@@ -226,6 +465,8 @@ def _memoized_eliminate(
         tuple(lo for lo, _hi in prog.bounds),
         method,
         tuple(dep_list),
+        model,
+        tuple(sorted(processors.items())) if processors else None,
     )
     with _ANALYSIS_LOCK:
         hit = _ANALYSIS_MEMO.get(key)
@@ -233,7 +474,7 @@ def _memoized_eliminate(
             _ANALYSIS_MEMO.move_to_end(key)
             _ANALYSIS_STATS["hits"] += 1
             return hit
-    elim = _eliminate(prog, dep_list, method)  # built outside the lock
+    elim = _eliminate(prog, dep_list, method, model, processors)
     with _ANALYSIS_LOCK:
         _ANALYSIS_MEMO[key] = elim
         while len(_ANALYSIS_MEMO) > _ANALYSIS_MEMO_MAX:
@@ -242,46 +483,8 @@ def _memoized_eliminate(
     return elim
 
 
-def _accepted_options(
-    prepare: Callable[..., Dict[str, object]], options: Dict[str, object]
-) -> Dict[str, object]:
-    """The subset of scheduling-knob kwargs ``prepare`` can receive.
-
-    Backends registered before the knobs existed declared
-    ``prepare(optimized, retained)`` — the registry is public API, so a
-    legacy registrant must keep working (it simply never sees the knobs)
-    instead of dying on an unexpected keyword argument.  The signature
-    reflection is memoized per callable: the serving loop re-plans through
-    here twice per wave, and warm plans are sub-millisecond.
-    """
-
-    accepted = _accepted_option_names(prepare)
-    if accepted is None:
-        return options
-    return {k: v for k, v in options.items() if k in accepted}
-
-
-@functools.lru_cache(maxsize=64)
-def _accepted_option_names(
-    prepare: Callable[..., Dict[str, object]]
-) -> Optional[frozenset]:
-    """``None`` = pass everything (``**kwargs`` or un-inspectable)."""
-
-    import inspect
-
-    try:
-        params = inspect.signature(prepare).parameters
-    except (TypeError, ValueError):  # C callables etc.: assume modern
-        return None
-    if any(
-        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
-    ):
-        return None
-    return frozenset(params)
-
-
 # ---------------------------------------------------------------------- #
-# Report + entry point
+# Report
 # ---------------------------------------------------------------------- #
 
 @dataclasses.dataclass(frozen=True)
@@ -300,7 +503,10 @@ class ParallelizationReport:
     # scheduling knobs this report was planned under (echoed into the
     # statement-level SCC summary for backends without a schedule)
     chunk_limit: Optional[int] = None
-    scc_policy: object = None
+    scc_policy: SccPolicyLike = None
+    # execution model the plan assumed (procmap nests carry the map too)
+    model: str = "doall"
+    processors: Optional[Dict[str, object]] = None
 
     @functools.cached_property
     def _statement_scc_summary(self) -> dict:
@@ -311,15 +517,26 @@ class ParallelizationReport:
         O(instances) pass, too heavy to redo on every ``summary()`` call
         (cached_property writes to ``__dict__``, which a frozen dataclass
         permits — same pattern as WavefrontSchedule's cached stats).
+
+        Strategy records reflect the report's *backend*: its ``level_cost``
+        capability hook feeds the cost model, so an xla report shows the
+        strategy the compiled artifact actually schedules.
         """
 
         from repro.core.scc import analyze_sccs
 
+        try:
+            hook = get_backend(self.backend).level_cost
+        except ValueError:  # backend since unregistered: interpreter model
+            hook = None
         return analyze_sccs(
             self.program,
             self.elimination.retained,
+            model=self.model,
+            processors=self.processors,
             chunk_limit=self.chunk_limit,
             scc_policy=self.scc_policy,
+            level_cost=hook,
         ).summary()
 
     def summary(self) -> dict:
@@ -352,6 +569,291 @@ class ParallelizationReport:
         return out
 
 
+# artifacts a backend's prepare() may contribute to the report; anything
+# else it returns stays on Executable.artifacts (e.g. xla's compile_hit)
+_REPORT_ARTIFACT_FIELDS = ("wavefront", "compiled")
+
+
+# ---------------------------------------------------------------------- #
+# The staged pipeline: plan -> SyncPlan -> compile -> Executable
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class SyncPlan:
+    """The backend-independent analysis artifact of :func:`plan`.
+
+    Holds everything steps 1–4 produced — computed exactly once, however
+    many backends the plan is later compiled for.  ``compile`` never re-runs
+    dependence analysis or elimination; it only schedules/lowers.
+    """
+
+    program: LoopProgram
+    options: PlanOptions
+    dependences: Tuple[Dependence, ...]
+    fission: FissionResult
+    naive_sync: SyncProgram
+    elimination: EliminationResult
+    optimized_sync: SyncProgram
+
+    @property
+    def retained(self) -> Tuple[Dependence, ...]:
+        """The synchronized dependences the optimized program enforces."""
+
+        return tuple(self.elimination.retained)
+
+    def compile(self, backend: str = "threaded", **backend_options) -> "Executable":
+        """Target one registered backend; returns an :class:`Executable`.
+
+        The effective options are the plan's scheduling knobs
+        (:meth:`PlanOptions.scheduling_options`) overlaid with
+        ``backend_options`` (an explicit ``None`` override removes a plan
+        knob).  Every effective option must be in the backend's capability
+        contract (:func:`backend_accepted_options`) — unknown options raise
+        ``ValueError`` naming the backend and its accepted options.
+        """
+
+        spec = get_backend(backend)
+        options = self.options.scheduling_options()
+        options.update(backend_options)
+        # contract-check the NAMES first, None-valued overrides included —
+        # a misspelled knob must error even when its value is None; only
+        # then does an explicit None override remove a plan-level knob
+        _check_backend_options(spec, options)
+        options = {k: v for k, v in options.items() if v is not None}
+        _validate_scheduling_options(options)
+        artifacts: Dict[str, object] = {}
+        if spec.prepare:
+            artifacts = dict(
+                spec.prepare(
+                    self.optimized_sync, self.elimination.retained, **options
+                )
+            )
+        return Executable(
+            plan=self,
+            backend=backend,
+            options=tuple(sorted(options.items(), key=lambda kv: kv[0])),
+            artifacts=artifacts,
+        )
+
+    def summary(self) -> dict:
+        """Backend-independent plan summary (sync counts, elimination)."""
+
+        naive = self.naive_sync.sync_instruction_count()
+        opt = self.optimized_sync.sync_instruction_count()
+        return {
+            "dependences": len(self.dependences),
+            "loop_carried": len(loop_carried(self.dependences)),
+            "eliminated": len(self.elimination.eliminated),
+            "retained": len(self.elimination.retained),
+            "naive_sync_instructions": naive["total"],
+            "optimized_sync_instructions": opt["total"],
+            "method": self.elimination.method,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Executable:
+    """One backend's compiled form of a :class:`SyncPlan`.
+
+    ``run(store=None, stalls=None)`` executes the optimized program and
+    returns its final store — the same contract on every backend (``stalls``
+    inject adversarial delays on the threaded machine; the deterministic
+    backends accept and ignore them, exactly like the differential hooks
+    always have).  ``report()`` yields the familiar
+    :class:`ParallelizationReport`.
+    """
+
+    plan: SyncPlan
+    backend: str
+    options: Tuple[Tuple[str, object], ...]
+    artifacts: Mapping[str, object]
+
+    def run(
+        self,
+        store: Optional[Mapping[str, dict]] = None,
+        stalls: Optional[Mapping] = None,
+    ) -> dict:
+        spec = get_backend(self.backend)
+        if spec.run is not None:
+            return spec.run(
+                self.plan.optimized_sync,
+                dict(self.artifacts),
+                store=store,
+                stalls=stalls,
+            )
+        if spec.differential is not None:
+            return spec.differential(
+                self.plan.optimized_sync, store=store, stalls=stalls
+            )
+        raise ValueError(
+            f"backend {self.backend!r} registers neither a run nor a "
+            "differential hook — it cannot execute programs"
+        )
+
+    # convenience views over the prepared artifacts ---------------------- #
+    @property
+    def wavefront(self) -> Optional[WavefrontSchedule]:
+        return self.artifacts.get("wavefront")
+
+    @property
+    def compiled(self) -> Optional[object]:
+        return self.artifacts.get("compiled")
+
+    @functools.cached_property
+    def _report(self) -> ParallelizationReport:
+        opts = dict(self.options)
+        extra = {
+            k: self.artifacts[k]
+            for k in _REPORT_ARTIFACT_FIELDS
+            if k in self.artifacts
+        }
+        return ParallelizationReport(
+            program=self.plan.program,
+            dependences=self.plan.dependences,
+            fission=self.plan.fission,
+            naive_sync=self.plan.naive_sync,
+            elimination=self.plan.elimination,
+            optimized_sync=self.plan.optimized_sync,
+            backend=self.backend,
+            chunk_limit=opts.get("chunk_limit"),
+            scc_policy=opts.get("scc_policy"),
+            model=opts.get("model", "doall"),
+            processors=opts.get("processors"),
+            **extra,
+        )
+
+    def report(self) -> ParallelizationReport:
+        return self._report
+
+
+def plan(
+    prog: LoopProgram,
+    options: Optional[PlanOptions] = None,
+    **overrides,
+) -> SyncPlan:
+    """Run the backend-independent §5 analysis exactly once.
+
+    ``options`` is a :class:`PlanOptions`; as a convenience, keyword
+    arguments build one (``plan(prog, method="both")``) — but not both at
+    once.  The pipeline: dependence analysis (or the caller's ``deps``),
+    fission, naive synchronization insertion, memoized elimination,
+    retained-set validation (unschedulable sets raise
+    :class:`~repro.core.wavefront.WavefrontError` here, with the offending
+    SCC and a witness cycle — before any backend is involved), and the
+    optimized sync program.
+    """
+
+    if options is None:
+        options = PlanOptions(**overrides)
+    elif overrides:
+        raise TypeError(
+            "pass either a PlanOptions or keyword options, not both "
+            f"(got options={options!r} plus {sorted(overrides)})"
+        )
+
+    dep_list = (
+        list(options.deps) if options.deps is not None else analyze(prog)
+    )
+    fiss = fission(prog, dep_list)
+    naive = insert_synchronization(prog, dep_list, merge=False)
+
+    elim = _memoized_eliminate(
+        prog,
+        dep_list,
+        options.method,
+        options.model,
+        options.processor_map,
+    )
+
+    # Genuinely unschedulable retained sets (lexicographically negative /
+    # backward-zero distances — a cyclic Δ-sign mix no machine can honor)
+    # fail HERE, at plan time, for every backend: the threaded machine
+    # would deadlock mid-execution and the schedulers would reject later
+    # with less context.  repro.core.scc raises with the offending SCC's
+    # statements and a witness cycle.
+    validate_retained(prog, elim.retained)
+
+    optimized = strip_dependences(naive, elim.eliminated)
+    if options.merge_sends:
+        optimized = insert_synchronization(
+            prog, list(elim.retained), merge=True
+        )
+    return SyncPlan(
+        program=prog,
+        options=options,
+        dependences=tuple(dep_list),
+        fission=fiss,
+        naive_sync=naive,
+        elimination=elim,
+        optimized_sync=optimized,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Built-in backends
+# ---------------------------------------------------------------------- #
+
+register_backend(
+    BackendSpec(
+        name="threaded",
+        prepare=None,
+        accepts=(),  # the paper's machine takes no scheduling knobs
+        differential=lambda sync, *, store=None, stalls=None: run_threaded(
+            sync, stalls=stalls, store=store, compare=False
+        ).store,
+        run=lambda sync, artifacts, *, store=None, stalls=None: run_threaded(
+            sync, stalls=stalls, store=store, compare=False
+        ).store,
+        description="one thread per iteration, send/wait only (the paper's machine)",
+    )
+)
+
+
+def _wavefront_prepare(
+    optimized,
+    retained,
+    *,
+    chunk_limit=None,
+    scc_policy=None,
+    model="doall",
+    processors=None,
+):
+    return {
+        "wavefront": schedule_wavefronts(
+            optimized,
+            list(retained),
+            model=model,
+            processors=processors,
+            chunk_limit=chunk_limit,
+            scc_policy=scc_policy,
+        )
+    }
+
+
+def _wavefront_run(sync, artifacts, *, store=None, stalls=None):
+    return run_wavefront(
+        sync, schedule=artifacts.get("wavefront"), store=store, compare=False
+    ).store
+
+
+register_backend(
+    BackendSpec(
+        name="wavefront",
+        prepare=_wavefront_prepare,
+        accepts=("chunk_limit", "scc_policy", "model", "processors"),
+        differential=lambda sync, *, store=None, stalls=None: run_wavefront(
+            sync, store=store, compare=False
+        ).store,
+        run=_wavefront_run,
+        description="NumPy dependence-level interpreter (O(depth) batched steps)",
+    )
+)
+
+
+# ---------------------------------------------------------------------- #
+# Compatibility shim
+# ---------------------------------------------------------------------- #
+
 def parallelize(
     prog: LoopProgram,
     *,
@@ -360,79 +862,38 @@ def parallelize(
     merge_sends: bool = False,
     backend: str = "threaded",
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
 ) -> ParallelizationReport:
-    """Run the full §5 pipeline.
+    """One-shot shim over ``plan(...).compile(backend).report()``.
 
-    ``method``: ``"isd"`` (transitive reduction), ``"pattern"`` (Li &
-    Abu-Sufah matching), ``"both"`` (pattern first — cheap — then ISD on the
-    survivors), or ``"none"`` (naive synchronization only).
+    Kept for source compatibility: reports are bit-identical to the staged
+    pipeline's (it *is* the staged pipeline) and structural compile-cache
+    keys are unchanged, so a warm artifact is shared across both entry
+    points.  New code should stage explicitly — the plan is computed once
+    and can be compiled for several backends::
 
-    ``backend``: any registered backend name (:func:`registered_backends`).
-    ``"threaded"`` targets the send/wait machine
-    (:func:`repro.core.executor.run_threaded`); ``"wavefront"`` additionally
-    compiles the optimized sync program to a dependence-level schedule for
-    :func:`repro.core.wavefront.run_wavefront`; ``"xla"`` resolves the
-    structural compile cache (:mod:`repro.compile`) and attaches the
-    compiled artifact to the report — repeated structurally equal requests
-    share the artifact and skip re-analysis (see the ``compile_cache``
-    counters in :meth:`ParallelizationReport.summary`).
+        p = plan(prog, PlanOptions(method="isd"))
+        schedule = p.compile("wavefront").report().wavefront
+        store    = p.compile("xla").run()
 
-    ``chunk_limit`` caps the DOACROSS chunk of chunked recurrence SCCs;
-    ``scc_policy`` selects the per-SCC recurrence strategy (``None``/
-    ``"auto"`` = cost model, ``"chunk"``/``"skew"``/``"dswp"`` forces one, a
-    :class:`~repro.core.policy.SchedulingPolicy` instance plugs in).  Both
-    are validated here, at the pipeline entry, so a bad knob fails with a
-    clear message instead of deep inside ``schedule_levels``.
+    Note the capability contract applies here too: a scheduling knob the
+    target backend does not declare (e.g. ``chunk_limit`` with
+    ``backend="threaded"``) raises ``ValueError`` instead of being silently
+    dropped.
     """
 
-    spec = get_backend(backend)
-    if chunk_limit is not None and (
-        not isinstance(chunk_limit, int)
-        or isinstance(chunk_limit, bool)
-        or chunk_limit < 1
-    ):
-        raise ValueError(
-            f"chunk_limit must be a positive integer or None, got "
-            f"{chunk_limit!r} — a chunk of zero iterations cannot make "
-            "progress (use chunk_limit=1 for fully sequential chunks)"
-        )
-    resolve_policy(scc_policy)  # raises ValueError with the allowed values
-
-    dep_list = list(deps) if deps is not None else analyze(prog)
-    fiss = fission(prog, dep_list)
-    naive = insert_synchronization(prog, dep_list, merge=False)
-
-    elim = _memoized_eliminate(prog, dep_list, method)
-
-    # Genuinely unschedulable retained sets (lexicographically negative /
-    # backward-zero distances — a cyclic Δ-sign mix no machine can honor)
-    # fail HERE, at compile time, for every backend: the threaded machine
-    # would deadlock mid-execution and the schedulers would reject later
-    # with less context.  repro.core.scc raises with the offending SCC's
-    # statements and a witness cycle.
-    validate_retained(prog, elim.retained)
-
-    optimized = strip_dependences(naive, elim.eliminated)
-    if merge_sends:
-        optimized = insert_synchronization(
-            prog, list(elim.retained), merge=True
-        )
-    extra = {}
-    if spec.prepare:
-        options = {"chunk_limit": chunk_limit, "scc_policy": scc_policy}
-        extra = spec.prepare(
-            optimized, elim.retained, **_accepted_options(spec.prepare, options)
-        )
-    return ParallelizationReport(
-        program=prog,
-        dependences=tuple(dep_list),
-        fission=fiss,
-        naive_sync=naive,
-        elimination=elim,
-        optimized_sync=optimized,
-        backend=backend,
+    warnings.warn(
+        "parallelize() is deprecated in favor of the staged API: "
+        "plan(prog, PlanOptions(...)).compile(backend).report() "
+        "(one analysis, any number of backends)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    options = PlanOptions(
+        method=method,
+        deps=tuple(deps) if deps is not None else None,
+        merge_sends=merge_sends,
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
-        **extra,
     )
+    return plan(prog, options).compile(backend).report()

@@ -55,11 +55,16 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from repro.core.dependence import Dependence
 
 Matrix = Tuple[Tuple[int, ...], ...]
+
+# A backend's per-SCC cost hook (``BackendSpec.level_cost``): estimate the
+# execution cost of one strategy's offer on that backend.  ``None`` keeps the
+# interpreter model (depth × statement groups) the offers are born with.
+LevelCostFn = Callable[["StrategyPlan", "SccContext"], float]
 
 
 # ---------------------------------------------------------------------- #
@@ -276,6 +281,10 @@ class StrategyPlan:
     chunk: Optional[int] = None
     carried_min: Optional[int] = None
     skew: Optional[Matrix] = None
+    # widest (statement, level) batch the strategy would emit — what a
+    # backend whose per-step cost scales with padded lane width (the XLA
+    # level loop) conditions its ``level_cost`` hook on
+    max_width: Optional[int] = None
     reason: str = ""
 
 
@@ -293,10 +302,18 @@ class SchedulingPolicy:
         raise NotImplementedError
 
 
+# The user-facing ``scc_policy`` knob everywhere it appears (``parallelize``,
+# ``PlanOptions``, ``schedule_levels``, ...): ``None``/"auto" = cost model, a
+# strategy name forces one, a SchedulingPolicy instance plugs in directly.
+# (Defined after the class so the Union holds the real type, not a forward
+# reference — typing.get_args(SccPolicyLike) must expose SchedulingPolicy.)
+SccPolicyLike = Union[None, str, SchedulingPolicy]
 
 
-def _scc_depth(ctx: SccContext, *, lanes: bool) -> int:
-    """Exact longest-path depth of the SCC's standalone instance graph.
+
+
+def _scc_shape(ctx: SccContext, *, lanes: bool) -> Tuple[int, int]:
+    """Exact (depth, max group width) of the SCC's standalone instance graph.
 
     Edges: intra-iteration program order among the SCC's statements, the
     internal retained dependences, and (``lanes=True``, the per-SCC dswp
@@ -309,25 +326,28 @@ def _scc_depth(ctx: SccContext, *, lanes: bool) -> int:
     depends on (NOT the whole context: ``chunk_limit`` doesn't change this
     graph, and the chunk-knob sweep in the tests would otherwise defeat the
     memo), because report summaries and knob sweeps re-analyze the same SCC.
+    The max group width — the widest (statement, level) batch — rides along
+    for backend ``level_cost`` hooks whose per-step cost scales with padded
+    lane width.
     """
 
-    return _scc_depth_cached(
+    return _scc_shape_cached(
         ctx.statements, ctx.internal_deps, ctx.bounds, lanes
     )
 
 
 @functools.lru_cache(maxsize=64)
-def _scc_depth_cached(
+def _scc_shape_cached(
     statements: Tuple[str, ...],
     internal_deps: Tuple[Dependence, ...],
     bounds: Tuple[Tuple[int, int], ...],
     lanes: bool,
-) -> int:
+) -> Tuple[int, int]:
     from repro.core.ir import iterations_of
 
     pts = iterations_of(bounds)
     if not pts:
-        return 0
+        return 0, 0
     names = statements
     in_space = set(pts)
     nodes = [(s, it) for it in pts for s in names]
@@ -370,7 +390,12 @@ def _scc_depth_cached(
                 if indeg[v] == 0:
                     nxt.append(v)
         frontier = nxt
-    return max(level.values(), default=-1) + 1
+    depth = max(level.values(), default=-1) + 1
+    group_width: Dict[Tuple[str, int], int] = {}
+    for (s, _it), lvl in level.items():
+        key = (s, lvl)
+        group_width[key] = group_width.get(key, 0) + 1
+    return depth, max(group_width.values(), default=0)
 
 
 class ChunkedDoacross(SchedulingPolicy):
@@ -403,6 +428,7 @@ class ChunkedDoacross(SchedulingPolicy):
             width=float(chunk),
             chunk=chunk,
             carried_min=carried_min,
+            max_width=chunk,
             reason=(
                 f"{total} iterations in {n_chunks} sequential chunks of "
                 f"{chunk} (min carried distance {carried_min}"
@@ -433,7 +459,7 @@ class UnimodularSkew(SchedulingPolicy):
         if mat is None:
             return None
         _, total = strides_of(ctx.bounds)
-        depth = _scc_depth(ctx, lanes=False)
+        depth, max_width = _scc_shape(ctx, lanes=False)
         n_stmts = len(ctx.statements)
         width = total / depth if depth else 0.0
         return StrategyPlan(
@@ -442,6 +468,7 @@ class UnimodularSkew(SchedulingPolicy):
             depth=depth,
             width=width,
             skew=mat,
+            max_width=max_width,
             reason=(
                 f"unimodular skew {mat} makes all internal distances "
                 f"per-dim non-negative; transformed-space layering runs "
@@ -480,6 +507,7 @@ class PerSccModel(SchedulingPolicy):
             cost=float(depth * n_stmts),
             depth=depth,
             width=width,
+            max_width=1,  # each lane advances one instance per level
             reason=(
                 f"per-SCC dswp: {n_stmts} statement lane(s) pipelined over "
                 f"{total} iterations in ~{depth} levels (analytic lane-chain "
@@ -500,14 +528,25 @@ STRATEGY_NAMES: Tuple[str, ...] = tuple(s.name for s in DEFAULT_STRATEGIES)
 
 
 class CostModelPolicy(SchedulingPolicy):
-    """Score every feasible strategy, pick the cheapest (ties → first)."""
+    """Score every feasible strategy, pick the cheapest (ties → first).
+
+    ``level_cost`` is the backend's capability hook
+    (:attr:`~repro.core.parallelizer.BackendSpec.level_cost`): when set,
+    each offer is re-scored as what it would cost *on that machine* instead
+    of the interpreters' depth × statement-groups model the offers are born
+    with — which is how ``plan.compile("xla")`` can pick ``chunk`` for the
+    same SCC where ``plan.compile("wavefront")`` picks ``skew``.
+    """
 
     name = "auto"
 
     def __init__(
-        self, candidates: Sequence[SchedulingPolicy] = DEFAULT_STRATEGIES
+        self,
+        candidates: Sequence[SchedulingPolicy] = DEFAULT_STRATEGIES,
+        level_cost: Optional[LevelCostFn] = None,
     ) -> None:
         self.candidates = tuple(candidates)
+        self.level_cost = level_cost
 
     def plan(self, ctx: SccContext) -> Optional[StrategyPlan]:
         offers = [
@@ -515,13 +554,21 @@ class CostModelPolicy(SchedulingPolicy):
         ]
         if not offers:
             return None
-        best = min(offers, key=lambda p: p.cost)
-        scoreboard = ", ".join(
-            f"{p.strategy}={p.cost:.0f}" for p in offers
-        )
+        if self.level_cost is not None:
+            scored = [(float(self.level_cost(p, ctx)), p) for p in offers]
+            tag = (
+                "cost model "
+                f"({getattr(self.level_cost, '__name__', 'level_cost')})"
+            )
+        else:
+            scored = [(p.cost, p) for p in offers]
+            tag = "cost model"
+        best_cost, best = min(scored, key=lambda t: t[0])  # tie → first
+        scoreboard = ", ".join(f"{p.strategy}={c:.0f}" for c, p in scored)
         return dataclasses.replace(
             best,
-            reason=f"cost model picked {best.strategy} "
+            cost=best_cost,
+            reason=f"{tag} picked {best.strategy} "
             f"({scoreboard}); {best.reason}",
         )
 
@@ -561,17 +608,25 @@ class _ForcedPolicy(SchedulingPolicy):
         )
 
 
-def resolve_policy(spec: object) -> SchedulingPolicy:
+def resolve_policy(
+    spec: SccPolicyLike, level_cost: Optional[LevelCostFn] = None
+) -> SchedulingPolicy:
     """Normalize a user-facing ``scc_policy`` value to a policy object.
 
     ``None``/``"auto"`` → the cost model; a strategy name forces it (with
     chunk fallback when infeasible); a :class:`SchedulingPolicy` instance
     passes through.  Raises ``ValueError`` for anything else — this is the
-    validation ``parallelize()`` runs at entry.
+    validation ``PlanOptions``/``parallelize()`` runs at entry.
+
+    ``level_cost`` is the scheduling backend's cost hook: it is consulted
+    only by the default cost model, so a forced strategy or an explicit
+    policy instance is never silently re-scored.  It deliberately does NOT
+    participate in the structural compile key (each backend resolves its own
+    hook, so within one backend's cache "auto" is unambiguous).
     """
 
     if spec is None or spec == "auto":
-        return CostModelPolicy()
+        return CostModelPolicy(level_cost=level_cost)
     if isinstance(spec, SchedulingPolicy):
         return spec
     if isinstance(spec, str):
@@ -607,7 +662,17 @@ def policy_signature(spec: object) -> Tuple:
         if isinstance(p, _ForcedPolicy):
             return base + (_sig(p.inner),)
         if isinstance(p, CostModelPolicy):
-            return base + (tuple(_sig(c) for c in p.candidates),)
+            hook = p.level_cost
+            if hook is None:
+                hook_id = None
+            else:
+                # behavioral identity, not qualname: two distinct lambdas
+                # both print "<lambda>" — reuse the compute-fingerprint
+                # machinery (lazy import: structure imports this module)
+                from repro.compile.structure import compute_fingerprint
+
+                hook_id = compute_fingerprint(hook)
+            return base + (tuple(_sig(c) for c in p.candidates), hook_id)
         state = getattr(p, "__dict__", None) or {}
         return base + (
             tuple(sorted((k, repr(v)) for k, v in state.items())),

@@ -62,8 +62,10 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram
 from repro.core.policy import (
+    LevelCostFn,
     Matrix,
     SccContext,
+    SccPolicyLike,
     StrategyPlan,
     find_unimodular_skew,
     linearize as _linearized,
@@ -356,7 +358,8 @@ def analyze_sccs(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
+    level_cost: Optional[LevelCostFn] = None,
 ) -> SccPartition:
     """Condense + classify; validates the retained set first (may raise).
 
@@ -366,9 +369,13 @@ def analyze_sccs(
     SCC: ``None``/``"auto"`` runs the cost model, a strategy name
     (``"chunk"``/``"skew"``/``"dswp"``) forces it, and any
     :class:`~repro.core.policy.SchedulingPolicy` instance plugs in directly.
+    ``level_cost`` is the scheduling backend's per-SCC cost hook
+    (:attr:`~repro.core.parallelizer.BackendSpec.level_cost`), consulted by
+    the default cost model only — never by forced strategies or explicit
+    policy instances.
     """
 
-    policy = resolve_policy(scc_policy)
+    policy = resolve_policy(scc_policy, level_cost=level_cost)
     validate_retained(prog, retained)
     bounds = prog.bounds
     deps = [d for d in retained if not _vacuous(d.distance, bounds)]
@@ -502,7 +509,8 @@ def hybrid_levels(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
+    level_cost: Optional[LevelCostFn] = None,
 ) -> Tuple[List[Dict[str, List[Tuple[int, ...]]]], SccPartition]:
     """Longest-path layering over mixed instance/chunk scheduling units.
 
@@ -544,6 +552,7 @@ def hybrid_levels(
         processors=processors,
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
+        level_cost=level_cost,
     )
     bounds = prog.bounds
     deps = [d for d in retained if not _vacuous(d.distance, bounds)]

@@ -61,6 +61,7 @@ import numpy as np
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram, run_sequential
 from repro.core.isd import Instance, build_isd
+from repro.core.policy import LevelCostFn, SccPolicyLike
 from repro.core.scc import (
     SccPartition,
     WavefrontError,
@@ -117,7 +118,7 @@ class WavefrontSchedule:
     # the scc_policy spec this schedule was planned under (None/"auto",
     # a strategy name, or a SchedulingPolicy instance) — part of the
     # lowering hand-off for the same reason as chunk_limit
-    scc_policy: object = None
+    scc_policy: SccPolicyLike = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -186,7 +187,8 @@ def schedule_wavefronts(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: "SccPolicyLike" = None,
+    level_cost: Optional["LevelCostFn"] = None,
 ) -> WavefrontSchedule:
     """Dependence-level layering of ``sync`` (hybrid when cycles demand it).
 
@@ -205,6 +207,7 @@ def schedule_wavefronts(
         processors=processors,
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
+        level_cost=level_cost,
     )
 
 
@@ -229,7 +232,8 @@ def schedule_levels(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: "SccPolicyLike" = None,
+    level_cost: Optional["LevelCostFn"] = None,
 ) -> WavefrontSchedule:
     """Layer a bare :class:`LoopProgram` given its retained dependences.
 
@@ -245,7 +249,10 @@ def schedule_levels(
     (:mod:`repro.core.policy`) picks per SCC: chunked DOACROSS blocks of at
     most ``chunk_limit`` iterations, a unimodular-skew diagonal wavefront,
     or a per-SCC dswp pipeline.  ``scc_policy`` forces one strategy
-    (``"chunk"``/``"skew"``/``"dswp"``); the default runs the cost model.
+    (``"chunk"``/``"skew"``/``"dswp"``); the default runs the cost model,
+    through the scheduling backend's ``level_cost`` hook when one is given
+    (the compiled backend schedules with its own step-cost model — see
+    ``repro.compile.xla_level_cost``).
     """
 
     deps = list(retained)
@@ -259,6 +266,7 @@ def schedule_levels(
             processors=processors,
             chunk_limit=chunk_limit,
             scc_policy=scc_policy,
+            level_cost=level_cost,
         )
         return WavefrontSchedule(
             program=prog,
@@ -327,6 +335,7 @@ def schedule_levels(
             model=model,
             processors=processors,
             scc_policy=scc_policy,
+            level_cost=level_cost,
         ),
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
@@ -467,7 +476,7 @@ def run_wavefront(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
-    scc_policy: object = None,
+    scc_policy: SccPolicyLike = None,
 ) -> WavefrontReport:
     """Execute ``sync`` level by level, one vectorized op per group.
 

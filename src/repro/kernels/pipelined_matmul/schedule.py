@@ -32,12 +32,13 @@ eliminable = 2.  Asserted in tests and reported by the benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List
 
 from repro.core.dependence import ANTI, FLOW, Dependence
-from repro.core.elimination import eliminate_transitive
 from repro.core.ir import ArrayRef, LoopProgram, Statement
-from repro.core.wavefront import WavefrontSchedule, schedule_levels
+from repro.core.parallelizer import PlanOptions, SyncPlan, plan
+from repro.core.wavefront import WavefrontSchedule
 
 PROCESSORS = {"ISSUE": "mxu", "COMPUTE": "mxu", "LOAD": "dma"}
 
@@ -96,21 +97,42 @@ class KernelPipelinePlan:
         }
 
 
-def plan_pipeline(depth: int = 2, steps: int = 16) -> KernelPipelinePlan:
-    prog = make_kloop_program(steps)
-    deps = kloop_dependences(depth)
-    res = eliminate_transitive(
-        prog, deps, model="procmap", processors=PROCESSORS
+def _kloop_options(depth: int) -> PlanOptions:
+    """The staged pipeline's typed options for the K-loop: explicit
+    dependences (the ``i mod depth`` aliasing is not affine) under the
+    two-processor ``procmap`` execution model."""
+
+    return PlanOptions(
+        method="isd",
+        deps=tuple(kloop_dependences(depth)),
+        model="procmap",
+        processors=PROCESSORS,
     )
+
+
+@functools.lru_cache(maxsize=32)
+def _kloop_plan(depth: int, steps: int) -> SyncPlan:
+    """``plan()`` of the K-loop, memoized per (depth, steps).
+
+    The parallelizer memoizes the elimination bounds-free, but fission,
+    naive insertion and retained validation would still re-run per call —
+    this cache keeps the warm ``compile_kloop`` path analysis-free, like
+    the pre-staged ``_KLOOP_RETAINED`` memo did.
+    """
+
+    return plan(make_kloop_program(steps), _kloop_options(depth))
+
+
+def plan_pipeline(depth: int = 2, steps: int = 16) -> KernelPipelinePlan:
+    p = _kloop_plan(depth, steps)
+    res = p.elimination
     cross = [
         d
         for d in res.retained
         if PROCESSORS[d.source] != PROCESSORS[d.sink]
     ]
     credit = any(d.kind == ANTI for d in res.retained)
-    wf = schedule_levels(
-        prog, res.retained, model="procmap", processors=PROCESSORS
-    )
+    wf = p.compile("wavefront").report().wavefront
     return KernelPipelinePlan(
         depth=depth,
         retained=tuple(res.retained),
@@ -128,34 +150,19 @@ def kloop_wavefronts(depth: int = 2, steps: int = 16) -> WavefrontSchedule:
     return plan_pipeline(depth, steps).wavefront
 
 
-# retained deps per buffer depth: kloop_dependences and the elimination
-# window derive from distances and the fixed lower bound only, never steps
-_KLOOP_RETAINED: dict = {}
-
-
 def compile_kloop(depth: int = 2, steps: int = 16):
     """Resolve the K-loop plan through the structural compile cache.
 
-    The cache key covers the statement graph, the retained dependences and
-    the procmap model — *not* ``steps`` — so re-planning the same pipeline at
-    a different K extent is a structural hit: only the per-bounds level
-    tables are (re)built (the per-depth elimination is memoized here, so a
-    hit really does skip all analysis).  Returns ``(CompiledProgram, hit)``.
+    Staged end to end: ``plan()`` (bounds-free memoized elimination) →
+    ``compile("xla")`` (structural cache).  The cache key covers the
+    statement graph, the retained dependences and the procmap model —
+    *not* ``steps`` — so re-planning the same pipeline at a different K
+    extent is a structural hit: only the per-bounds level tables are
+    (re)built.  Returns ``(CompiledProgram, hit)``.
     """
 
-    from repro.compile import get_or_compile
-
-    retained = _KLOOP_RETAINED.get(depth)
-    if retained is None:
-        retained = _KLOOP_RETAINED[depth] = plan_pipeline(
-            depth, steps
-        ).retained
-    return get_or_compile(
-        make_kloop_program(steps),
-        retained,
-        model="procmap",
-        processors=PROCESSORS,
-    )
+    exe = _kloop_plan(depth, steps).compile("xla")
+    return exe.artifacts["compiled"], exe.artifacts["compile_hit"]
 
 
 def overlapped_levels(wf: WavefrontSchedule) -> int:

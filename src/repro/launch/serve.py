@@ -10,8 +10,9 @@ iteration, so the decode batch stays full — the serving pattern the
 decode_32k/long_500k dry-run cells size.  Uses the int8 KV cache when
 ``--kv-quant`` is set.
 
-Each batch wave re-plans its synchronization through
-``parallelize(..., backend="xla")`` — two plans, resolved *concurrently*
+Each batch wave resolves its synchronization through the staged pipeline —
+``plan()`` once per program *structure* (memoized below), then a fresh
+``SyncPlan.compile("xla")`` per wave — two compiles, resolved *concurrently*
 (two planner threads per wave, the way a real server overlaps scheduling
 work), both riding the structural compile cache (:mod:`repro.compile`):
 
@@ -19,15 +20,16 @@ work), both riding the structural compile cache (:mod:`repro.compile`):
     reads it at Δ=0), and
   * a recurrence-bearing cross-slot rescoring scan whose mixed-sign carried
     dependence makes the plan a *hybrid* artifact — the scheduling-policy
-    engine (:mod:`repro.core.policy`) picks a strategy per SCC (the cost
-    model chooses the unimodular skew here; chunking would serialize the
-    whole scan), so the serving path exercises skewed/hybrid artifacts
-    under concurrent re-planning, not just DOALL waves.
+    engine (:mod:`repro.core.policy`) picks a strategy per SCC through the
+    xla backend's ``level_cost`` capability hook (the NumPy interpreter
+    would skew this scan; the compiled level loop's near-flat narrow-step
+    cost can resolve it differently), so the serving path exercises hybrid
+    artifacts under concurrent re-planning, not just DOALL waves.
 
 The dependence structures are identical from wave to wave, so every wave
-after the first is a structural-cache hit for both plans — the serving loop
-never re-analyzes or re-lowers.  The hit/miss counters are printed with the
-throughput summary.
+after the first is a plan-memo hit AND a structural-cache hit for both
+compiles — the serving loop never re-analyzes or re-lowers.  The hit/miss
+counters are printed with the throughput summary.
 """
 
 from __future__ import annotations
@@ -35,6 +37,7 @@ from __future__ import annotations
 import argparse
 import concurrent.futures
 import dataclasses
+import functools
 import time
 from typing import List, Optional
 
@@ -47,17 +50,19 @@ class Request:
     done: bool = False
 
 
-def plan_wave_sync(max_new: int):
-    """Sync plan for one decode wave, resolved via the structural cache.
+@functools.lru_cache(maxsize=16)
+def _decode_plan(max_new: int):
+    """The decode chain's backend-independent SyncPlan, analyzed once.
 
     The per-slot decode chain is the paper's loop in miniature: DECODE
     extends the KV cache from the previous step's cache (flow, Δ=1), SAMPLE
     reads the fresh cache (flow, Δ=0).  The structure is independent of
-    which requests occupy the slots, so repeated waves (and any ``max_new``
-    — bounds are not part of the cache key) resolve to one compiled artifact.
+    which requests occupy the slots, so the plan (and below it, the
+    compiled artifact — bounds are not part of the structural key) is
+    shared by every wave at this ``max_new``.
     """
 
-    from repro.core import ArrayRef, LoopProgram, Statement, parallelize
+    from repro.core import ArrayRef, LoopProgram, Statement, plan
 
     prog = LoopProgram(
         statements=(
@@ -66,26 +71,25 @@ def plan_wave_sync(max_new: int):
         ),
         bounds=((1, max(2, max_new)),),
     )
-    return parallelize(prog, method="isd", backend="xla")
+    return plan(prog, method="isd")
 
 
-def plan_scan_sync(slots: int, horizon: int):
-    """Sync plan for the cross-slot rescoring scan — a *cyclic* wave shape.
+@functools.lru_cache(maxsize=16)
+def _scan_plan(slots: int, horizon: int):
+    """The cross-slot rescoring scan's SyncPlan — a *cyclic* wave shape.
 
     RESCORE folds each slot's running score with the previous step's score
     of the same slot (reads ``score[s, t-1]``: flow, Δ=(0,1)) and borrows
     the neighboring slot's one-step-newer score (reads ``score[s-1, t+1]``:
     flow, Δ=(1,-1)) — a mixed-sign recurrence SCC, the request shape the
-    acyclic decode plan never produces.  EMIT reads the
-    settled score (DOALL, pipelined against the scan).  The (0,1) carried
-    dependence pins DOACROSS chunks to 1, so the scheduling policy's cost
-    model picks the unimodular skew and the structural cache serves a
-    *skewed hybrid* artifact wave after wave.  Structure is independent of
-    which requests occupy the slots, so every re-plan after the first is a
-    structural hit at any (slots, horizon).
+    acyclic decode plan never produces.  EMIT reads the settled score
+    (DOALL, pipelined against the scan).  The (0,1) carried dependence pins
+    DOACROSS chunks to 1, and the per-backend cost model decides between
+    the unimodular skew and unit chunks at compile time — either way a
+    *hybrid* artifact served from the structural cache wave after wave.
     """
 
-    from repro.core import ArrayRef, LoopProgram, Statement, parallelize
+    from repro.core import ArrayRef, LoopProgram, Statement, plan
 
     prog = LoopProgram(
         statements=(
@@ -100,7 +104,19 @@ def plan_scan_sync(slots: int, horizon: int):
         ),
         bounds=((0, max(2, slots)), (0, max(2, horizon))),
     )
-    return parallelize(prog, method="isd", backend="xla")
+    return plan(prog, method="isd")
+
+
+def plan_wave_sync(max_new: int):
+    """One wave's decode-chain report: plan memo + structural compile cache."""
+
+    return _decode_plan(max_new).compile("xla").report()
+
+
+def plan_scan_sync(slots: int, horizon: int):
+    """One wave's rescoring-scan report (hybrid artifact, see _scan_plan)."""
+
+    return _scan_plan(slots, horizon).compile("xla").report()
 
 
 def plan_wave(
@@ -110,11 +126,12 @@ def plan_wave(
 ):
     """Resolve both wave plans concurrently (decode chain + rescoring scan).
 
-    Two planner threads race through ``parallelize`` into the structural
-    compile cache — the concurrency the cache's locking discipline is built
-    for, now exercised by a cyclic workload on every serving wave.  Pass a
-    long-lived ``pool`` from the serving loop: warm waves plan in
-    sub-millisecond cache hits, which per-wave executor setup would dwarf.
+    Two planner threads race through ``SyncPlan.compile("xla")`` into the
+    structural compile cache — the concurrency the cache's locking
+    discipline is built for, now exercised by a cyclic workload on every
+    serving wave.  Pass a long-lived ``pool`` from the serving loop: warm
+    waves plan in sub-millisecond cache hits, which per-wave executor setup
+    would dwarf.
     """
 
     if pool is None:

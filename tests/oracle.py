@@ -30,7 +30,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 from repro.core import (
     LoopProgram,
     execution_backends,
-    parallelize,
+    plan,
     run_sequential,
 )
 
@@ -82,12 +82,19 @@ def run_all_backends(
         "sequential": run_sequential(prog, init),
     }
     for method in methods:
-        rep = parallelize(prog, method=method)
-        variants = {"naive": rep.naive_sync, "optimized": rep.optimized_sync}
-        for label, sync in variants.items():
-            for name in names:
-                out = specs[name].differential(sync, store=init, stalls=stalls)
-                results[f"{name}/{method}/{label}"] = out
+        # staged pipeline: ONE analysis per method, then one compile per
+        # backend — the optimized variant executes through Executable.run
+        # (the uniform run contract), the naive variant through the
+        # backend's raw differential hook (it is not a plan product)
+        p = plan(prog, method=method)
+        for name in names:
+            exe = p.compile(name)
+            results[f"{name}/{method}/optimized"] = exe.run(
+                store=init, stalls=stalls
+            )
+            results[f"{name}/{method}/naive"] = specs[name].differential(
+                p.naive_sync, store=init, stalls=stalls
+            )
     return results
 
 

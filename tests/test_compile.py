@@ -17,7 +17,7 @@ from repro.core import (
     Statement,
     analyze,
     insert_synchronization,
-    parallelize,
+    plan,
     paper_alg4,
     paper_alg6,
     registered_backends,
@@ -47,7 +47,7 @@ class TestBackendRegistration:
         assert "xla" in registered_backends()
 
     def test_parallelize_attaches_compiled_artifact(self):
-        rep = parallelize(paper_alg6(8), method="isd", backend="xla")
+        rep = plan(paper_alg6(8), method="isd").compile("xla").report()
         assert rep.compiled is not None
         assert rep.backend == "xla"
         s = rep.summary()
@@ -88,7 +88,7 @@ class TestStructuralCache:
         dependence sets — distinct artifacts, no false sharing."""
 
         cache = CompileCache()
-        rep = parallelize(paper_alg6(8), method="isd")
+        rep = plan(paper_alg6(8), method="isd").compile("threaded").report()
         r_naive = run_xla(rep.naive_sync, cache=cache)
         r_opt = run_xla(rep.optimized_sync, cache=cache)
         assert r_opt.cache_events["structural"] == "miss"
@@ -241,7 +241,7 @@ class TestExecutionSemantics:
         assert r.store == run_sequential(prog, init)
 
     def test_report_mirrors_wavefront_stats(self):
-        rep = parallelize(paper_alg6(6), method="isd", backend="wavefront")
+        rep = plan(paper_alg6(6), method="isd").compile("wavefront").report()
         r = run_xla(rep.optimized_sync, schedule=rep.wavefront)
         assert r.stats.levels == rep.wavefront.depth
         assert r.stats.instances == rep.wavefront.instances
@@ -344,9 +344,9 @@ class TestAnalysisMemo:
         from repro.core import analysis_cache_stats, clear_analysis_cache
 
         clear_analysis_cache()
-        parallelize(_chain_program(8), method="isd")
+        plan(_chain_program(8), method="isd").compile("threaded").report()
         before = analysis_cache_stats()
-        rep = parallelize(_chain_program(200), method="isd")  # upper bound only
+        rep = plan(_chain_program(200), method="isd").compile("threaded").report()  # upper bound only
         after = analysis_cache_stats()
         assert after["hits"] == before["hits"] + 1
         assert rep.optimized_sync.program.bounds == ((1, 200),)
@@ -362,8 +362,8 @@ class TestWarmSpeed:
 
         from repro.core import run_wavefront
 
-        rep = parallelize(paper_alg6(1025), method="isd", backend="xla")
-        wrep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+        rep = plan(paper_alg6(1025), method="isd").compile("xla").report()
+        wrep = plan(paper_alg6(1025), method="isd").compile("wavefront").report()
         fn_xla = lambda: run_xla(rep.optimized_sync, compare=False)
         fn_np = lambda: run_wavefront(
             wrep.optimized_sync, schedule=wrep.wavefront, compare=False

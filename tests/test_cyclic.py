@@ -26,7 +26,7 @@ from repro.core import (
     Statement,
     analyze,
     paper_alg4,
-    parallelize,
+    plan,
     run_threaded,
     run_wavefront,
 )
@@ -146,7 +146,7 @@ class TestCyclicDifferential:
 
         prog = mixed_cycle_pm1()
         for backend in ("wavefront", "xla"):
-            rep = parallelize(prog, method="isd", backend=backend)
+            rep = plan(prog, method="isd").compile(backend).report()
             assert rep.summary()["scc"]["recurrences"], backend
             if backend == "wavefront":
                 out = run_wavefront(rep.optimized_sync, schedule=rep.wavefront)
@@ -158,7 +158,7 @@ class TestCyclicDifferential:
 
     def test_chunk_limit_knob_still_bit_equal(self):
         prog = skew_recurrence(6, 9)
-        rep = parallelize(prog, method="isd")
+        rep = plan(prog, method="isd").compile("threaded").report()
         for chunk_limit in (1, 2, 3):
             out = run_wavefront(
                 rep.optimized_sync,
@@ -245,7 +245,7 @@ class TestRandomCyclic:
     )
     def test_property_scc_hybrid_matches_oracle(self, seed):
         prog = random_cyclic_program(seed)
-        rep = parallelize(prog, method="isd", backend="wavefront")
+        rep = plan(prog, method="isd").compile("wavefront").report()
         out = run_wavefront(rep.optimized_sync, schedule=rep.wavefront)
         assert out.matches_sequential
 
@@ -259,7 +259,7 @@ class TestCyclicSpeedup:
         import time
 
         prog = skew_recurrence(64, 16)  # 1024 iterations, chunk 15
-        rep = parallelize(prog, method="isd", backend="wavefront")
+        rep = plan(prog, method="isd").compile("wavefront").report()
         assert rep.summary()["scc"]["recurrences"]
         run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False)
         t0 = time.perf_counter()

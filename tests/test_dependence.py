@@ -197,9 +197,9 @@ class TestControlDependence:
         assert rep.matches_sequential
 
     def test_guarded_optimized_sync_matches(self):
-        from repro.core import parallelize, run_threaded
+        from repro.core import plan, run_threaded
 
-        rep = parallelize(self._guarded(), method="both")
+        rep = plan(self._guarded(), method="both").compile("threaded").report()
         assert len(rep.elimination.eliminated) >= 1
         run = run_threaded(rep.optimized_sync, stalls={("S2", (1,)): 0.1})
         assert run.matches_sequential

@@ -14,7 +14,7 @@ from repro.core import (
     paper_alg1,
     paper_alg4,
     paper_alg6,
-    parallelize,
+    plan,
     run_threaded,
     strip_dependences,
 )
@@ -71,19 +71,19 @@ class TestPaperAlg5Race:
 class TestOptimizedSyncStillCorrect:
     @pytest.mark.parametrize("method", ["isd", "pattern", "both"])
     def test_alg6_optimized(self, method):
-        rep = parallelize(paper_alg6(6), method=method)
+        rep = plan(paper_alg6(6), method=method).compile("threaded").report()
         run = run_threaded(
             rep.optimized_sync, stalls={("S3", (1,)): 0.15, ("S2", (2,)): 0.1}
         )
         assert run.matches_sequential
 
     def test_alg4_optimized(self):
-        rep = parallelize(paper_alg4(6), method="isd")
+        rep = plan(paper_alg4(6), method="isd").compile("threaded").report()
         run = run_threaded(rep.optimized_sync, stalls={("S2", (1,)): 0.15})
         assert run.matches_sequential
 
     def test_sync_ops_reduced(self):
-        rep = parallelize(paper_alg6(8), method="isd")
+        rep = plan(paper_alg6(8), method="isd").compile("threaded").report()
         naive = run_threaded(rep.naive_sync)
         opt = run_threaded(rep.optimized_sync)
         assert naive.matches_sequential and opt.matches_sequential

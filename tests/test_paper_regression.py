@@ -16,7 +16,7 @@ from repro.core import (
     insert_synchronization,
     paper_alg4,
     paper_alg6,
-    parallelize,
+    plan,
     run_threaded,
     run_wavefront,
     strip_dependences,
@@ -74,7 +74,7 @@ class TestAlg5Golden:
         S2 δf(b,Δ=1) S1 — see test_executor.py), so correctness is asserted
         on the *complete* graph's optimized program instead."""
 
-        rep = parallelize(self.prog, method="isd", backend="wavefront")
+        rep = plan(self.prog, method="isd").compile("wavefront").report()
         assert rep.naive_sync.sync_instruction_count()["total"] == 8
         assert rep.optimized_sync.sync_instruction_count()["total"] == 4
         assert [d.pretty() for d in rep.elimination.eliminated] == [
@@ -95,7 +95,7 @@ class TestAlg6Golden:
     """Fig. 6: the synchronization-elimination example, same lock-down."""
 
     def test_end_to_end_counts_and_witness(self):
-        rep = parallelize(paper_alg6(8), method="isd", backend="wavefront")
+        rep = plan(paper_alg6(8), method="isd").compile("wavefront").report()
         assert rep.naive_sync.sync_instruction_count()["total"] == 4
         assert rep.optimized_sync.sync_instruction_count()["total"] == 2
         assert rep.naive_sync.runtime_sync_ops() == 28

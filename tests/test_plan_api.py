@@ -1,0 +1,486 @@
+"""The staged Plan→Executable API (ISSUE 5).
+
+Covers what is *specific* to the redesign — execution semantics ride on
+tests/oracle.py as always:
+
+  * PlanOptions: frozen, validated, hashable typed options;
+  * plan reuse: one ``plan()`` + N ``compile()``s runs dependence analysis
+    and elimination exactly once (counting spy + analysis_cache_stats), and
+    ``Executable.run`` stores are bit-equal to the oracle;
+  * backend capability contracts: undeclared options raise (never silently
+    dropped), legacy registrants included;
+  * the backend-aware cost model: one plan, different strategies on
+    wavefront vs xla for the same SCC, both bit-equal;
+  * back-compat: the ``parallelize()`` shim produces a field-for-field
+    identical report and shares the structural compile-cache entry with the
+    staged entry point (warm hit across old/new).
+"""
+
+import typing
+import warnings
+
+import pytest
+
+from oracle import assert_equivalent
+from repro.core import (
+    ArrayRef,
+    BackendSpec,
+    LoopProgram,
+    PlanOptions,
+    SccPolicyLike,
+    SchedulingPolicy,
+    Statement,
+    analysis_cache_stats,
+    backend_accepted_options,
+    clear_analysis_cache,
+    get_backend,
+    parallelize,
+    paper_alg6,
+    plan,
+    register_backend,
+    run_sequential,
+)
+from repro.core.dependence import analyze
+from repro.core.fission import fission
+from repro.core.sync import insert_synchronization, strip_dependences
+
+
+def wide_serialized(ni=5, nj=16):
+    """{(0,1), (1,-1)} self-recurrence: the per-backend cost hooks disagree
+    (the interpreter skews, the compiled level loop chunks)."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# PlanOptions
+# ---------------------------------------------------------------------- #
+
+class TestPlanOptions:
+    def test_frozen_and_hashable(self):
+        a = PlanOptions(method="both", chunk_limit=3, scc_policy="chunk")
+        b = PlanOptions(method="both", chunk_limit=3, scc_policy="chunk")
+        assert a == b and hash(a) == hash(b)
+        assert len({a, b}) == 1
+        with pytest.raises(dataclasses_frozen_error()):
+            a.method = "isd"  # type: ignore[misc]
+
+    def test_deps_normalized_to_tuple(self):
+        deps = analyze(paper_alg6(6))
+        opts = PlanOptions(deps=deps)
+        assert isinstance(opts.deps, tuple)
+        hash(opts)
+
+    def test_processors_normalized_and_hashable(self):
+        opts = PlanOptions(
+            method="isd", model="procmap", processors={"S1": "p0"}
+        )
+        assert opts.processors == (("S1", "p0"),)
+        assert opts.processor_map == {"S1": "p0"}
+        hash(opts)
+
+    @pytest.mark.parametrize("bad", (0, -1, True, 2.5, "4"))
+    def test_chunk_limit_validated(self, bad):
+        with pytest.raises(ValueError, match="chunk_limit"):
+            PlanOptions(chunk_limit=bad)
+
+    def test_method_validated(self):
+        with pytest.raises(ValueError, match="elimination method"):
+            PlanOptions(method="magic")
+
+    def test_scc_policy_validated(self):
+        with pytest.raises(ValueError, match="scc_policy"):
+            PlanOptions(scc_policy="diagonal")
+
+    def test_model_validated(self):
+        with pytest.raises(ValueError, match="execution model"):
+            PlanOptions(model="simd")
+        with pytest.raises(ValueError, match="processors"):
+            PlanOptions(model="procmap")
+        with pytest.raises(ValueError, match="procmap"):
+            PlanOptions(processors={"S1": "p0"})
+        with pytest.raises(ValueError, match="doall"):
+            PlanOptions(method="pattern", model="dswp")
+
+    def test_plan_rejects_options_plus_overrides(self):
+        with pytest.raises(TypeError, match="not both"):
+            plan(paper_alg6(4), PlanOptions(), method="isd")
+
+    def test_scc_policy_like_alias_is_exported(self):
+        """Satellite: a real SccPolicyLike alias, used in the signatures."""
+
+        import inspect
+
+        args = typing.get_args(SccPolicyLike)
+        assert type(None) in args and str in args
+        assert SchedulingPolicy in args
+        for fn, param in (
+            (parallelize, "scc_policy"),
+            (plan_options_field_type(), None),
+        ):
+            if param is None:
+                assert fn == "SccPolicyLike"
+                continue
+            ann = inspect.signature(fn).parameters[param].annotation
+            assert "SccPolicyLike" in str(ann)
+        from repro.core.wavefront import schedule_levels
+
+        ann = inspect.signature(schedule_levels).parameters["scc_policy"]
+        assert "SccPolicyLike" in str(ann.annotation)
+
+
+def dataclasses_frozen_error():
+    import dataclasses
+
+    return dataclasses.FrozenInstanceError
+
+
+def plan_options_field_type() -> str:
+    import dataclasses
+
+    (ann,) = [
+        f.type
+        for f in dataclasses.fields(PlanOptions)
+        if f.name == "scc_policy"
+    ]
+    return str(ann)
+
+
+# ---------------------------------------------------------------------- #
+# Plan reuse: analysis exactly once, Executable.run bit-equal
+# ---------------------------------------------------------------------- #
+
+class TestPlanReuse:
+    def test_elimination_runs_exactly_once_across_backends(self, monkeypatch):
+        """Satellite: plan once + compile wavefront AND xla = one
+        elimination (counting spy on the transitive reduction) and one
+        analysis-memo miss, zero extra lookups."""
+
+        import repro.core.parallelizer as par
+
+        calls = {"n": 0}
+        real = par.eliminate_transitive
+
+        def spy(*args, **kwargs):
+            calls["n"] += 1
+            return real(*args, **kwargs)
+
+        monkeypatch.setattr(par, "eliminate_transitive", spy)
+        clear_analysis_cache()
+        prog = wide_serialized(4, 7)
+        p = plan(prog, method="isd")
+        assert calls["n"] == 1
+        stats = analysis_cache_stats()
+        assert stats == {"hits": 0, "misses": 1}
+
+        exe_wf = p.compile("wavefront")
+        exe_xla = p.compile("xla")
+        assert calls["n"] == 1, "compile() must not re-run elimination"
+        assert analysis_cache_stats() == stats, (
+            "compile() must not even consult the analysis memo"
+        )
+
+        oracle = run_sequential(prog, prog.initial_store())
+        assert exe_wf.run() == oracle
+        assert exe_xla.run() == oracle
+
+    def test_executable_run_through_oracle_matrix(self):
+        """Satellite: Executable.run stores bit-equal via the existing
+        differential harness (run_all_backends routes the optimized variant
+        through Executable.run for every registered backend)."""
+
+        assert_equivalent(wide_serialized(4, 6), methods=("none", "isd"))
+        assert_equivalent(paper_alg6(7))
+
+    def test_uniform_run_contract_signature(self):
+        p = plan(paper_alg6(6))
+        oracle = run_sequential(paper_alg6(6), paper_alg6(6).initial_store())
+        for backend in ("threaded", "wavefront", "xla"):
+            exe = p.compile(backend)
+            # positional store, keyword stalls — the uniform contract
+            assert exe.run(None, stalls=None) == oracle, backend
+
+
+# ---------------------------------------------------------------------- #
+# Capability contracts
+# ---------------------------------------------------------------------- #
+
+class TestCapabilityContract:
+    def test_declared_contracts(self):
+        assert backend_accepted_options(get_backend("threaded")) == ()
+        assert set(backend_accepted_options(get_backend("wavefront"))) == {
+            "chunk_limit", "scc_policy", "model", "processors",
+        }
+        assert set(backend_accepted_options(get_backend("xla"))) == {
+            "chunk_limit", "scc_policy", "model", "processors",
+        }
+
+    def test_threaded_rejects_scheduling_knobs(self):
+        with pytest.raises(ValueError, match="threaded.*chunk_limit"):
+            plan(paper_alg6(4), chunk_limit=2).compile("threaded")
+        with pytest.raises(ValueError, match="threaded.*scc_policy"):
+            plan(paper_alg6(4)).compile("threaded", scc_policy="chunk")
+
+    def test_unknown_option_names_accepted_set(self):
+        with pytest.raises(ValueError, match="frobnicate") as ei:
+            plan(paper_alg6(4)).compile("wavefront", frobnicate=1)
+        assert "chunk_limit" in str(ei.value)
+        assert "scc_policy" in str(ei.value)
+
+    def test_unknown_option_rejected_even_when_none_valued(self):
+        """A misspelled knob must error even when its value is None — the
+        None-filter only removes *declared* plan-level knobs."""
+
+        with pytest.raises(ValueError, match="chunk_limt"):
+            plan(paper_alg6(4)).compile("wavefront", chunk_limt=None)
+
+    def test_legacy_registrant_contract_inferred_and_enforced(self):
+        """A pre-knob registrant (prepare(optimized, retained)) accepts
+        nothing: the knob that used to be silently dropped now errors."""
+
+        name = "legacy-test-backend"
+        register_backend(
+            BackendSpec(
+                name=name,
+                prepare=lambda optimized, retained: {},
+                differential=None,
+            )
+        )
+        try:
+            assert backend_accepted_options(get_backend(name)) == ()
+            p = plan(paper_alg6(4), chunk_limit=2)
+            with pytest.raises(ValueError, match="legacy-test-backend"):
+                p.compile(name)
+            # without the knob it still compiles (no artifacts, no runner)
+            exe = plan(paper_alg6(4)).compile(name)
+            assert exe.artifacts == {}
+        finally:
+            import repro.core.parallelizer as par
+
+            par._REGISTRY.pop(name, None)
+
+    def test_var_kwargs_registrant_accepts_everything(self):
+        name = "kwargs-test-backend"
+        seen = {}
+        register_backend(
+            BackendSpec(
+                name=name,
+                prepare=lambda optimized, retained, **kw: seen.update(kw)
+                or {},
+                differential=None,
+            )
+        )
+        try:
+            assert backend_accepted_options(get_backend(name)) is None
+            plan(paper_alg6(4), chunk_limit=2).compile(name, custom_knob=7)
+            assert seen == {"chunk_limit": 2, "custom_knob": 7}
+        finally:
+            import repro.core.parallelizer as par
+
+            par._REGISTRY.pop(name, None)
+
+    def test_compile_override_beats_plan_knob_and_none_removes(self):
+        # Δ=(1,-1) stencil: carried_min = nj-1 = 8, so the caps are visible
+        stencil = LoopProgram(
+            statements=(
+                Statement(
+                    "S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)
+                ),
+            ),
+            bounds=((0, 4), (0, 9)),
+        )
+        p = plan(stencil, chunk_limit=1, scc_policy="chunk")
+        rep = p.compile("wavefront", chunk_limit=2).report()
+        assert rep.chunk_limit == 2
+        (rec,) = rep.wavefront.scc.recurrences
+        assert rec.chunk == 2
+        # an explicit None override removes the plan-level knob entirely
+        rep2 = p.compile("wavefront", chunk_limit=None).report()
+        assert rep2.chunk_limit is None
+        assert rep2.wavefront.scc.recurrences[0].chunk == 8
+
+
+# ---------------------------------------------------------------------- #
+# Backend-aware cost model
+# ---------------------------------------------------------------------- #
+
+class TestBackendAwareCostModel:
+    def test_one_plan_two_strategies_both_bit_equal(self):
+        """ISSUE acceptance: the level_cost hook makes xla and wavefront
+        choose different strategies for the same SCC; both bit-equal."""
+
+        prog = wide_serialized(5, 16)
+        p = plan(prog, method="isd")
+        exe_wf = p.compile("wavefront")
+        exe_xla = p.compile("xla")
+        (rec_wf,) = exe_wf.report().summary()["scc"]["recurrences"]
+        (rec_xla,) = exe_xla.report().summary()["scc"]["recurrences"]
+        assert rec_wf["strategy"] == "skew"
+        assert rec_xla["strategy"] == "chunk"
+        assert "xla_level_cost" in rec_xla["reason"]
+
+        oracle = run_sequential(prog, prog.initial_store())
+        assert exe_wf.run() == oracle
+        assert exe_xla.run() == oracle
+
+    def test_xla_artifact_actually_schedules_its_own_strategy(self):
+        """The divergence is not a reporting artifact: the compiled level
+        tables are built from the xla-cost schedule."""
+
+        from repro.compile import run_xla
+
+        prog = wide_serialized(5, 16)
+        p = plan(prog, method="isd")
+        p.compile("xla")
+        r = run_xla(p.optimized_sync, compare=True)
+        (rec,) = r.schedule.scc.recurrences
+        assert rec.strategy == "chunk"
+        assert r.matches_sequential
+
+    def test_forced_policy_wins_over_backend_hook(self):
+        prog = wide_serialized(5, 16)
+        rep = plan(prog).compile("xla", scc_policy="skew").report()
+        (rec,) = rep.summary()["scc"]["recurrences"]
+        assert rec["strategy"] == "skew"
+
+    def test_acyclic_programs_unaffected_by_hook(self):
+        p = plan(paper_alg6(8))
+        s_wf = p.compile("wavefront").report().summary()
+        s_xla = p.compile("xla").report().summary()
+        assert s_wf["scc"]["recurrences"] == []
+        assert s_xla["scc"]["recurrences"] == []
+
+    def test_procmap_report_scc_summary_uses_plan_model(self):
+        """A procmap plan's xla report must condense under procmap, not
+        silently fall back to doall (the schedule-less summary path)."""
+
+        from repro.kernels.pipelined_matmul.schedule import (
+            PROCESSORS,
+            _kloop_options,
+            make_kloop_program,
+        )
+
+        p = plan(make_kloop_program(8), _kloop_options(2))
+        s = p.compile("xla").report().summary()
+        assert s["scc"]["model"] == "procmap"
+        s_wf = p.compile("wavefront").report().summary()
+        assert s_wf["scc"]["model"] == "procmap"
+        assert PROCESSORS  # the map participated (procmap requires it)
+
+    def test_policy_signature_distinguishes_level_cost_hooks(self):
+        from repro.core import CostModelPolicy
+        from repro.core.policy import policy_signature
+
+        a = policy_signature(CostModelPolicy(level_cost=lambda p, c: 1.0))
+        b = policy_signature(CostModelPolicy(level_cost=lambda p, c: 2.0))
+        assert a != b
+        assert policy_signature(CostModelPolicy()) == policy_signature("auto")
+
+
+# ---------------------------------------------------------------------- #
+# Back-compat: the parallelize() shim
+# ---------------------------------------------------------------------- #
+
+class TestBackCompatShim:
+    def _reference_report_fields(self, prog, method="isd"):
+        """The pre-redesign pipeline, reimplemented from its own pieces —
+        the golden the shim is held to, independent of plan()/compile()."""
+
+        from repro.core.elimination import eliminate_transitive
+
+        dep_list = analyze(prog)
+        fiss = fission(prog, dep_list)
+        naive = insert_synchronization(prog, dep_list, merge=False)
+        elim = eliminate_transitive(prog, dep_list)
+        optimized = strip_dependences(naive, elim.eliminated)
+        return dep_list, fiss, naive, elim, optimized
+
+    def test_shim_emits_deprecation_warning(self):
+        with pytest.warns(DeprecationWarning, match="parallelize"):
+            parallelize(paper_alg6(4), method="isd")
+
+    def test_report_equal_field_for_field_to_pre_redesign_golden(self):
+        """Satellite: shim report vs an independently computed golden —
+        summary dict included."""
+
+        prog = paper_alg6(8)
+        deps, fiss, naive, elim, optimized = self._reference_report_fields(
+            prog
+        )
+        with pytest.warns(DeprecationWarning):
+            rep = parallelize(prog, method="isd")
+        assert rep.program is prog
+        assert list(rep.dependences) == list(deps)
+        assert rep.fission.loop_names() == fiss.loop_names()
+        assert (
+            rep.naive_sync.sync_instruction_count()
+            == naive.sync_instruction_count()
+        )
+        assert rep.elimination.retained == elim.retained
+        assert rep.elimination.eliminated == elim.eliminated
+        assert rep.elimination.witnesses == elim.witnesses
+        assert (
+            rep.optimized_sync.sync_instruction_count()
+            == optimized.sync_instruction_count()
+        )
+        golden_summary = {
+            "dependences": 2,
+            "loop_carried": 2,
+            "eliminated": 1,
+            "naive_sync_instructions": 4,
+            "optimized_sync_instructions": 2,
+            "naive_runtime_sync_ops": 28,
+            "optimized_runtime_sync_ops": 14,
+            "method": "isd-transitive-reduction[doall]",
+            "backend": "threaded",
+            "scc": {
+                "sccs": 2,
+                "cyclic": 1,
+                "recurrences": [],
+                "model": "doall",
+                "policy": "auto",
+            },
+        }
+        assert rep.summary() == golden_summary
+
+    def test_shim_report_bit_identical_to_staged_entry(self):
+        prog = wide_serialized(4, 9)
+        staged = plan(prog, method="isd").compile("wavefront").report()
+        with pytest.warns(DeprecationWarning):
+            shim = parallelize(prog, method="isd", backend="wavefront")
+        assert shim.summary() == staged.summary()
+        assert shim.wavefront.levels == staged.wavefront.levels
+        assert shim.elimination == staged.elimination
+
+    def test_structural_cache_key_parity_warm_hit_across_entries(self):
+        """Satellite: the structural compile key is unchanged — computed by
+        the pre-redesign key function on the reference pipeline's retained
+        set — and a new-entry compile warms the cache for the old entry."""
+
+        from repro.compile import clear_compile_cache, compile_cache_stats
+        from repro.compile.structure import structural_key
+
+        prog = paper_alg6(9)
+        *_rest, elim, _opt = self._reference_report_fields(prog)
+        golden_key = structural_key(
+            prog, tuple(elim.retained), "doall", None, None, None
+        )
+
+        clear_compile_cache()
+        exe = plan(prog, method="isd").compile("xla")  # new entry: cold
+        assert exe.compiled.key == golden_key
+        assert compile_cache_stats()["misses"] == 1
+        with pytest.warns(DeprecationWarning):
+            rep = parallelize(prog, method="isd", backend="xla")  # old entry
+        assert rep.compiled is exe.compiled
+        stats = compile_cache_stats()
+        assert stats["misses"] == 1 and stats["hits"] == 1

@@ -28,7 +28,7 @@ from repro.core import (
     analyze,
     analyze_sccs,
     find_unimodular_skew,
-    parallelize,
+    plan,
     resolve_policy,
     run_wavefront,
     skew_point,
@@ -228,15 +228,14 @@ class TestStrategySelection:
         assert part.policy == "skew-only"
 
     def test_report_summary_carries_strategy_and_reason(self):
-        rep = parallelize(wide_serialized(5, 16), method="isd",
-                          backend="wavefront")
+        rep = plan(wide_serialized(5, 16), method="isd").compile("wavefront").report()
         (rec,) = rep.summary()["scc"]["recurrences"]
         assert rec["strategy"] == "skew"
         assert rec["skew"] is not None
         assert "cost model" in rec["reason"]
         assert rep.summary()["scc"]["policy"] == "auto"
         # threaded backend (no schedule) surfaces the same strategy record
-        rep_t = parallelize(wide_serialized(5, 16), method="isd")
+        rep_t = plan(wide_serialized(5, 16), method="isd").compile("threaded").report()
         assert rep_t.summary()["scc"]["recurrences"][0]["strategy"] == "skew"
 
     def test_policy_signature_distinguishes_but_is_stable(self):
@@ -283,23 +282,37 @@ class TestStrategySelection:
         assert resolve_policy(PerSccModel()).name == "dswp"
 
 
-class TestParallelizeEntryValidation:
+class TestEntryValidation:
     @pytest.mark.parametrize("bad", (0, -1, -100, True, 2.5, "4"))
     def test_rejects_non_positive_or_non_int_chunk_limit(self, bad):
+        # at PlanOptions construction ...
         with pytest.raises(ValueError, match="chunk_limit"):
-            parallelize(skew_stencil(), chunk_limit=bad)
+            plan(skew_stencil(), chunk_limit=bad)
+        # ... and at compile-time override
+        with pytest.raises(ValueError, match="chunk_limit"):
+            plan(skew_stencil()).compile("wavefront", chunk_limit=bad)
 
     def test_rejects_unknown_policy_before_any_analysis(self):
         with pytest.raises(ValueError, match="scc_policy"):
-            parallelize(skew_stencil(), scc_policy="wavefrontish")
-
-    def test_valid_knobs_accepted_on_every_backend(self):
-        for backend in ("threaded", "wavefront"):
-            rep = parallelize(
-                skew_stencil(), backend=backend, chunk_limit=2,
-                scc_policy="chunk",
+            plan(skew_stencil(), scc_policy="wavefrontish")
+        with pytest.raises(ValueError, match="scc_policy"):
+            plan(skew_stencil()).compile(
+                "wavefront", scc_policy="wavefrontish"
             )
-            assert rep.chunk_limit == 2
+
+    def test_valid_knobs_accepted_where_declared(self):
+        rep = plan(skew_stencil()).compile(
+            "wavefront", chunk_limit=2, scc_policy="chunk"
+        ).report()
+        assert rep.chunk_limit == 2
+
+    def test_undeclared_knob_rejected_not_silently_dropped(self):
+        """The capability contract: the threaded machine declares no
+        scheduling knobs, so passing one errors instead of doing nothing
+        (the old behavior silently filtered it away)."""
+
+        with pytest.raises(ValueError, match="threaded.*chunk_limit"):
+            plan(skew_stencil(), chunk_limit=2).compile("threaded")
 
 
 # ---------------------------------------------------------------------- #
@@ -325,9 +338,7 @@ class TestStrategyDifferential:
 
         from repro.compile import run_xla
 
-        rep = parallelize(
-            prog, method="isd", backend="wavefront", scc_policy=policy
-        )
+        rep = plan(prog, method="isd").compile("wavefront", scc_policy=policy).report()
         out_wf = run_wavefront(
             rep.optimized_sync, schedule=rep.wavefront, compare=True
         )
@@ -366,9 +377,7 @@ class TestStrategyDifferential:
             bounds=((0, rng.randint(3, 4)), (0, rng.randint(3, 5))),
         )
         for policy in ("skew", "dswp"):
-            rep = parallelize(
-                prog, method="isd", backend="wavefront", scc_policy=policy
-            )
+            rep = plan(prog, method="isd").compile("wavefront", scc_policy=policy).report()
             out = run_wavefront(
                 rep.optimized_sync, schedule=rep.wavefront, compare=True
             )
@@ -384,7 +393,7 @@ class TestStrategyDifferential:
         rng = random.Random(seed)
         ni, nj = rng.randint(3, 5), rng.randint(3, 6)
         prog = wide_serialized(ni, nj) if seed % 2 else skew_stencil(ni, nj)
-        rep = parallelize(prog, method="isd", backend="wavefront")
+        rep = plan(prog, method="isd").compile("wavefront").report()
         out = run_wavefront(rep.optimized_sync, schedule=rep.wavefront)
         assert out.matches_sequential
 
@@ -396,12 +405,8 @@ class TestStrategyDifferential:
 class TestSkewGeometry:
     def test_skew_depth_beats_chunk_depth_on_wide_inner_dim(self):
         prog = wide_serialized(6, 48)
-        wf_auto = parallelize(
-            prog, method="isd", backend="wavefront"
-        ).wavefront
-        wf_chunk = parallelize(
-            prog, method="isd", backend="wavefront", scc_policy="chunk"
-        ).wavefront
+        wf_auto = plan(prog, method="isd").compile("wavefront").report().wavefront
+        wf_chunk = plan(prog, method="isd").compile("wavefront", scc_policy="chunk").report().wavefront
         assert wf_auto.scc.recurrences[0].strategy == "skew"
         # chunk=1 serializes all iterations; skew is a diagonal wavefront
         assert wf_chunk.depth == 6 * 48
@@ -409,7 +414,7 @@ class TestSkewGeometry:
 
     def test_skew_schedule_covers_every_instance_exactly_once(self):
         prog = wide_serialized(5, 13)
-        wf = parallelize(prog, method="isd", backend="wavefront").wavefront
+        wf = plan(prog, method="isd").compile("wavefront").report().wavefront
         seen = [
             it for level in wf.levels for g in level for it in g.iterations
         ]
@@ -417,9 +422,7 @@ class TestSkewGeometry:
 
     def test_every_dep_edge_strictly_increases_level_under_skew(self):
         prog = wide_serialized(5, 9)
-        rep = parallelize(
-            prog, method="isd", backend="wavefront", scc_policy="skew"
-        )
+        rep = plan(prog, method="isd").compile("wavefront", scc_policy="skew").report()
         wf = rep.wavefront
         lvl = wf.level_of()
         for d in wf.retained:

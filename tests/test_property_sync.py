@@ -20,7 +20,7 @@ from repro.core import (
     eliminate_transitive,
     fission,
     insert_synchronization,
-    parallelize,
+    plan,
     run_sequential,
     run_threaded,
 )
@@ -81,21 +81,21 @@ class TestSyncSoundness:
     @given(programs_with_stalls())
     def test_isd_optimized_sync_preserves_semantics(self, case):
         prog, stalls = case
-        rep = parallelize(prog, method="isd")
+        rep = plan(prog, method="isd").compile("threaded").report()
         assert run_threaded(rep.optimized_sync, stalls=stalls).matches_sequential
 
     @common
     @given(programs_with_stalls())
     def test_pattern_optimized_sync_preserves_semantics(self, case):
         prog, stalls = case
-        rep = parallelize(prog, method="pattern")
+        rep = plan(prog, method="pattern").compile("threaded").report()
         assert run_threaded(rep.optimized_sync, stalls=stalls).matches_sequential
 
     @common
     @given(programs_with_stalls())
     def test_combined_methods_preserve_semantics(self, case):
         prog, stalls = case
-        rep = parallelize(prog, method="both")
+        rep = plan(prog, method="both").compile("threaded").report()
         assert run_threaded(rep.optimized_sync, stalls=stalls).matches_sequential
 
 
@@ -216,7 +216,7 @@ class TestMultiDimElimination:
             ArrayRef,
             LoopProgram,
             Statement,
-            parallelize,
+            plan,
             run_threaded,
         )
 
@@ -227,6 +227,6 @@ class TestMultiDimElimination:
             ),
             bounds=((0, 3), (0, 3)),
         )
-        rep = parallelize(prog, method="isd")
+        rep = plan(prog, method="isd").compile("threaded").report()
         run = run_threaded(rep.optimized_sync, stalls={("S2", (0, 1)): 0.05})
         assert run.matches_sequential

@@ -19,7 +19,7 @@ from repro.core import (
     analyze_sccs,
     paper_alg4,
     paper_alg6,
-    parallelize,
+    plan,
     scc_signature,
     tarjan_sccs,
     validate_retained,
@@ -173,10 +173,10 @@ class TestUnschedulableDiagnostics:
         with pytest.raises(WavefrontError, match="before itself"):
             validate_retained(prog, [bad])
 
-    def test_raised_at_parallelize_time_for_every_backend(self):
-        """The satellite contract: unschedulable sets fail in parallelize(),
-        not mid-execution — including for the threaded backend, which would
-        otherwise deadlock at run time."""
+    def test_raised_at_plan_time_for_every_backend(self):
+        """The satellite contract: unschedulable sets fail at plan() time,
+        not mid-execution — before any backend is involved, including the
+        threaded machine, which would otherwise deadlock at run time."""
 
         prog = paper_alg6(6)
         deps = list(analyze(prog)) + [
@@ -184,7 +184,7 @@ class TestUnschedulableDiagnostics:
         ]
         for backend in ("threaded", "wavefront"):
             with pytest.raises(WavefrontError, match="witness cycle"):
-                parallelize(prog, deps=deps, backend=backend)
+                plan(prog, deps=deps).compile(backend).report()
 
     def test_analyzer_output_always_validates(self):
         for prog in (paper_alg4(8), skew_stencil(), mixed_cycle()):
@@ -246,7 +246,7 @@ class TestHybridLayering:
                 assert len(names) == len(set(names))
 
     def test_report_surfaces_partition(self):
-        rep = parallelize(skew_stencil(), method="isd", backend="wavefront")
+        rep = plan(skew_stencil(), method="isd").compile("wavefront").report()
         s = rep.summary()
         assert s["scc"]["recurrences"][0]["statements"] == ["S1"]
         assert rep.wavefront.summary()["scc"]["sccs"] == 1

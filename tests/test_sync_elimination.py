@@ -15,7 +15,7 @@ from repro.core import (
     isd_window,
     paper_alg4,
     paper_alg6,
-    parallelize,
+    plan,
     prime_factors,
     strip_dependences,
 )
@@ -116,7 +116,7 @@ class TestAlg6Elimination:
         assert not pattern_matches(prog, dr, de)
 
     def test_optimized_sync_halves_instructions(self):
-        rep = parallelize(paper_alg6(), method="isd")
+        rep = plan(paper_alg6(), method="isd").compile("threaded").report()
         assert rep.naive_sync.sync_instruction_count()["total"] == 4
         assert rep.optimized_sync.sync_instruction_count()["total"] == 2
 

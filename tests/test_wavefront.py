@@ -23,7 +23,7 @@ from repro.core import (
     paper_alg1,
     paper_alg4,
     paper_alg6,
-    parallelize,
+    plan,
     run_threaded,
     run_wavefront,
     schedule_wavefronts,
@@ -179,7 +179,7 @@ class TestLayering:
             ),
             bounds=((0, 64),),
         )
-        rep = parallelize(prog, method="isd", backend="wavefront")
+        rep = plan(prog, method="isd").compile("wavefront").report()
         wf = rep.wavefront
         assert wf.depth == 2  # program order only: one level per statement
         assert wf.max_width == 64
@@ -189,7 +189,7 @@ class TestLayering:
         """Alg. 6 retains the Δ=1 c-dependence; the S2/S3 chain is truly
         sequential, so depth grows ~2 per iteration while S1 stays batched."""
 
-        rep = parallelize(paper_alg6(10), method="isd", backend="wavefront")
+        rep = plan(paper_alg6(10), method="isd").compile("wavefront").report()
         wf = rep.wavefront
         assert wf.depth == 2 * 9 + 1
         lvl = wf.level_of()
@@ -201,7 +201,7 @@ class TestLayering:
         strictly increase the level."""
 
         for _name, prog in DIFFERENTIAL_PROGRAMS[:6]:
-            rep = parallelize(prog, method="isd", backend="wavefront")
+            rep = plan(prog, method="isd").compile("wavefront").report()
             wf = rep.wavefront
             lvl = wf.level_of()
             names = prog.names
@@ -221,7 +221,7 @@ class TestLayering:
         assert len(lvl) == wf.instances
 
     def test_summary_fields(self):
-        rep = parallelize(paper_alg6(6), method="isd", backend="wavefront")
+        rep = plan(paper_alg6(6), method="isd").compile("wavefront").report()
         s = rep.summary()
         assert s["backend"] == "wavefront"
         assert s["wavefront_depth"] == rep.wavefront.depth
@@ -260,7 +260,7 @@ class TestDiagnostics:
 
     def test_unknown_backend_rejected(self):
         with pytest.raises(ValueError, match="unknown backend"):
-            parallelize(paper_alg6(4), backend="gpu")
+            plan(paper_alg6(4)).compile("gpu").report()
 
     def test_out_of_store_access_raises(self):
         prog = LoopProgram(
@@ -365,7 +365,7 @@ class TestSpeedup:
 
         import time
 
-        rep = parallelize(paper_alg6(1025), method="isd", backend="wavefront")
+        rep = plan(paper_alg6(1025), method="isd").compile("wavefront").report()
         run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False)
         t0 = time.perf_counter()
         run_wavefront(rep.optimized_sync, schedule=rep.wavefront, compare=False)
