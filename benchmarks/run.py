@@ -539,6 +539,56 @@ def bench_xla_policy_backend_aware() -> None:
     )
 
 
+def bench_inspector_sparse_matvec() -> None:
+    """Inspector-executor value bench: COO sparse matvec
+    ``y[row[k]] += v[k]*x[col[k]]`` with 512 nonzeros over 64 distinct rows
+    (8 hits each).  The conservative non-affine proxy chain serializes all
+    512 iterations; ``deps="inspect"`` layers the exact instance graph
+    instead (depth = max row multiplicity = 8).  Both sides execute warm in
+    THIS process on the wavefront backend, so the recorded ratio
+    (inspect / serialized) is runner-speed-free.  Bit-equality to the
+    sequential oracle is asserted before timing.  Not in KEY_BENCHES yet —
+    this row seeds BASELINE.json so the next PR can gate it.
+    """
+
+    from repro.core import (
+        PlanOptions,
+        indexed_store,
+        inspect_dependences,
+        plan,
+        run_sequential,
+        sparse_matvec,
+    )
+
+    n, distinct_rows = 512, 64
+    prog = sparse_matvec(n)
+    store = indexed_store(
+        prog,
+        {
+            "row": [k % distinct_rows for k in range(n)],
+            "col": [(3 * k) % n for k in range(n)],
+        },
+    )
+    exe_serial = plan(prog).compile("wavefront")
+    exe_inspect = plan(prog, PlanOptions(deps="inspect")).compile("wavefront")
+    init = {a: dict(c) for a, c in store.items()}
+    oracle = run_sequential(prog, init)
+    assert exe_serial.run(store=init) == oracle, "serialized diverged"
+    assert exe_inspect.run(store=init) == oracle, "inspected diverged"
+    serial_us = _best_of(lambda: exe_serial.run(store=init), n=5)
+    inspect_us = _best_of(lambda: exe_inspect.run(store=init), n=5)
+    edges = len(inspect_dependences(prog, store).edges)
+    ratio = inspect_us / serial_us
+    _row(
+        "inspector_sparse_matvec",
+        inspect_us,
+        f"n={n} distinct_rows={distinct_rows} instance_edges={edges} "
+        f"serialized_us={serial_us:.0f} inspect_us={inspect_us:.0f} "
+        f"parallel_over_serialized={ratio:.3f} both_bit_equal=True",
+        ratio=ratio,
+    )
+
+
 def bench_executor_sync_ops() -> None:
     from repro.core import paper_alg6, plan, run_threaded
 
@@ -675,6 +725,7 @@ BENCHES = [
     bench_scc_hybrid_pipeline,
     bench_skew_vs_chunk_wide,
     bench_xla_policy_backend_aware,
+    bench_inspector_sparse_matvec,
     bench_pp_schedule,
     bench_kernel_pipeline,
     bench_grad_sync_batching,

@@ -131,6 +131,7 @@ def _xla_prepare(
     scc_policy=None,
     model="doall",
     processors=None,
+    deps=None,
 ):
     from repro.compile.cache import get_or_compile
 
@@ -141,6 +142,7 @@ def _xla_prepare(
         processors=processors,
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
+        deps=deps,
     )
     # compile_hit stays on Executable.artifacts (it is per-compile-call
     # provenance, not a report field)
@@ -169,7 +171,7 @@ def _register() -> None:
         BackendSpec(
             name="xla",
             prepare=_xla_prepare,
-            accepts=("chunk_limit", "scc_policy", "model", "processors"),
+            accepts=("chunk_limit", "scc_policy", "model", "processors", "deps"),
             level_cost=xla_level_cost,
             differential=_xla_differential,
             run=_xla_run,

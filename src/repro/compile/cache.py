@@ -95,19 +95,24 @@ class CompileCache:
         processors: Optional[Dict[str, object]] = None,
         chunk_limit: Optional[int] = None,
         scc_policy: SccPolicyLike = None,
+        deps: Optional[str] = None,
     ) -> Tuple["CompiledProgram", bool]:
         """Resolve (or build) the artifact for this structure.
 
         Returns ``(compiled, hit)``.  The build happens *outside* the lock
         (the first one pays the jax import, seconds — holding the lock
         would stall concurrent hits on other keys); a lost build race
-        re-checks on insert and reuses the winner.
+        re-checks on insert and reuses the winner.  ``deps`` is the
+        non-affine dependence mode (``"inspect"``/``"speculate"``/None) —
+        a structural knob like ``chunk_limit``; the store-dependent
+        inspector graph itself lives with the artifact's per-bounds tables.
         """
 
         from repro.compile.lowering import CompiledProgram
 
         key = structural_key(
-            program, retained, model, processors, chunk_limit, scc_policy
+            program, retained, model, processors, chunk_limit, scc_policy,
+            deps,
         )
         with self._lock:
             entry = self._entries.get(key)
@@ -123,6 +128,7 @@ class CompileCache:
             processors=processors,
             chunk_limit=chunk_limit,
             scc_policy=scc_policy,
+            deps=deps,
         )
         built.cache = self
         with self._lock:
@@ -146,6 +152,7 @@ def get_or_compile(
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
     scc_policy: SccPolicyLike = None,
+    deps: Optional[str] = None,
 ) -> Tuple["CompiledProgram", bool]:
     """Module-level convenience over the process-global cache."""
 
@@ -156,6 +163,7 @@ def get_or_compile(
         processors=processors,
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
+        deps=deps,
     )
 
 

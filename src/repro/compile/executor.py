@@ -46,6 +46,34 @@ def execute_compiled(
     if compiled.cache is not None:
         compiled.cache.note_tables(table_hit)
     compiled.execute(case, dense)
+    if (
+        getattr(compiled, "deps_mode", None) == "speculate"
+        and prog.has_indirect()
+    ):
+        # the artifact ran the optimistic (affine-retained) schedule; check
+        # it against the inspector's exact instance graph and, on any
+        # violated edge, discard the result and re-run the conservative
+        # deps=None artifact from the untouched initial store
+        from repro.core.inspector import (
+            inspect_dependences,
+            speculation_violations,
+        )
+        from repro.compile.cache import GLOBAL_CACHE
+
+        inspection = inspect_dependences(prog, init)
+        if speculation_violations(
+            prog, inspection.edges, case.schedule.level_of()
+        ):
+            cache = compiled.cache if compiled.cache is not None else GLOBAL_CACHE
+            fallback, _ = cache.get_or_compile(
+                prog,
+                compiled.retained,
+                model=compiled.model,
+                processors=compiled.processors,
+                chunk_limit=compiled.chunk_limit,
+                scc_policy=compiled.scc_policy,
+            )
+            return execute_compiled(fallback, sync, store=init)
     return dense.to_dicts()
 
 
@@ -73,6 +101,7 @@ def run_xla(
     cache: Optional[CompileCache] = None,
     chunk_limit: Optional[int] = None,
     scc_policy: SccPolicyLike = None,
+    deps: Optional[str] = None,
 ) -> XlaReport:
     """Execute ``sync`` through the structural compile cache.
 
@@ -105,14 +134,28 @@ def run_xla(
         processors=processors,
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
+        deps=deps,
     )
 
     init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
-    dense = _DenseStore(init)
-    case, table_hit = compiled.prepare(prog, dense)
-    cache.note_tables(table_hit)
-    stats = compiled.execute(case, dense)
-    result = dense.to_dicts()
+    if deps == "speculate" and prog.has_indirect():
+        # validation + rollback live in execute_compiled; the report's
+        # schedule/stats describe the *speculative* attempt either way
+        result = execute_compiled(compiled, sync, store=init)
+        case, table_hit = compiled.prepare(prog, _DenseStore(init))
+        sched = case.schedule
+        stats = WavefrontStats(
+            levels=sched.depth,
+            batched_ops=sched.batched_ops,
+            instances=sched.instances,
+            max_width=sched.max_width,
+        )
+    else:
+        dense = _DenseStore(init)
+        case, table_hit = compiled.prepare(prog, dense)
+        cache.note_tables(table_hit)
+        stats = compiled.execute(case, dense)
+        result = dense.to_dicts()
 
     matches = True
     if compare:

@@ -58,12 +58,13 @@ later level reads).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.dependence import Dependence
-from repro.core.ir import LoopProgram
+from repro.core.ir import LoopProgram, is_indirect
 from repro.core.policy import SccPolicyLike
 from repro.core.wavefront import (
     WavefrontSchedule,
@@ -307,6 +308,7 @@ class CompiledProgram:
         processors: Optional[Dict[str, object]] = None,
         chunk_limit: Optional[int] = None,
         scc_policy: SccPolicyLike = None,
+        deps: Optional[str] = None,
     ) -> None:
         import collections
         import threading
@@ -320,6 +322,11 @@ class CompiledProgram:
         self.processors = dict(processors) if processors else None
         self.chunk_limit = chunk_limit
         self.scc_policy = scc_policy
+        # non-affine dependence mode: None (conservative proxies),
+        # "inspect" (exact per-bounds instance graph), or "speculate"
+        # (optimistic schedule; validation + rollback live in the run
+        # wrapper — repro.compile.executor.execute_compiled)
+        self.deps_mode = deps
         self.cache = None  # back-reference set by the owning CompileCache
         self._cases: "collections.OrderedDict[Tuple, PreparedCase]" = (
             collections.OrderedDict()
@@ -401,13 +408,59 @@ class CompiledProgram:
             )
         )
 
+    @staticmethod
+    def _content_key(program: LoopProgram, dense: _DenseStore) -> Optional[str]:
+        """Index-array content digest for indirect programs.
+
+        The level tables of an indirect access are computed from the index
+        array's *values* (and, under ``deps="inspect"``, so is the schedule
+        itself), so the per-bounds case key must cover them — this is where
+        store-dependent state lives, never in the bounds-free structural key.
+        Affine programs return None and pay nothing.
+        """
+
+        if not program.has_indirect():
+            return None
+        h = hashlib.sha1()
+        for arr in sorted(program.index_arrays()):
+            h.update(arr.encode())
+            h.update(repr(dense.origin[arr]).encode())
+            h.update(dense.data[arr].tobytes())
+            covered = dense.mask.get(arr)
+            if covered is not None:
+                h.update(covered.tobytes())
+        return h.hexdigest()
+
+    @staticmethod
+    def _index_store(program: LoopProgram, dense: _DenseStore) -> dict:
+        """Dict-form view of just the index arrays (inspector input)."""
+
+        out: dict = {}
+        for arr in program.index_arrays():
+            d = dense.data[arr]
+            lo = dense.origin[arr]
+            covered = dense.mask.get(arr)
+            cells = {}
+            for idx in np.ndindex(d.shape):
+                if covered is not None and not covered[idx]:
+                    continue
+                cells[tuple(int(x + l) for x, l in zip(idx, lo))] = float(
+                    d[idx]
+                )
+            out[arr] = cells
+        return out
+
     def prepare(
         self, program: LoopProgram, dense: _DenseStore
     ) -> Tuple[PreparedCase, bool]:
         """Level tables for these bounds + this store layout (memoized in a
         bounded LRU; thread-safe for concurrent serving)."""
 
-        key = (program.bounds, self._layout_key(dense))
+        key = (
+            program.bounds,
+            self._layout_key(dense),
+            self._content_key(program, dense),
+        )
         with self._lock:
             case = self._cases.get(key)
             if case is not None:
@@ -437,14 +490,32 @@ class CompiledProgram:
         # and explicit policy instances are untouched by the hook)
         from repro.compile import xla_level_cost
 
+        retained = list(self.retained)
+        instance_edges = None
+        if self.deps_mode is not None and program.has_indirect():
+            from repro.core.inspector import (
+                affine_retained,
+                inspect_dependences,
+            )
+
+            # drop the conservative non-affine proxies; under "inspect" the
+            # exact per-bounds instance graph replaces them, under
+            # "speculate" nothing does (optimistic doall — the run wrapper
+            # validates post-hoc and rolls back to the deps=None artifact)
+            retained = list(affine_retained(retained))
+            if self.deps_mode == "inspect":
+                instance_edges = inspect_dependences(
+                    program, self._index_store(program, dense)
+                ).edges
         sched = schedule_levels(
             program,
-            list(self.retained),
+            retained,
             model=self.model,
             processors=self.processors,
             chunk_limit=self.chunk_limit,
             scc_policy=self.scc_policy,
             level_cost=xla_level_cost,
+            instance_edges=instance_edges,
         )
         n_levels = sched.depth
         arrays = tuple(sorted(dense.data))
@@ -493,13 +564,47 @@ class CompiledProgram:
                     )
                 for role, ref in accesses:
                     a = ref.array
-                    coords = (
-                        pts
-                        + np.asarray(ref.offset_tuple(), np.int64)
-                        - np.asarray(origin[a], np.int64)
-                    )
+                    idx_inb = None
+                    if is_indirect(ref):
+                        # resolve the subscript against the index array's
+                        # *contents* — the reason this table cache is keyed
+                        # by _content_key on top of (bounds, layout)
+                        iarr = ref.index.array
+                        icoords = (
+                            pts
+                            + np.asarray(ref.index.offset_tuple(), np.int64)
+                            - np.asarray(origin[iarr], np.int64)
+                        )
+                        ishp = np.asarray(shapes[iarr], np.int64)
+                        idx_inb = np.all(
+                            (icoords >= 0) & (icoords < ishp), axis=1
+                        )
+                        iflat = np.ravel_multi_index(
+                            tuple(
+                                np.clip(icoords[:, d], 0, shapes[iarr][d] - 1)
+                                for d in range(icoords.shape[1])
+                            ),
+                            shapes[iarr],
+                        )
+                        ivals = dense.data[iarr].ravel()[iflat]
+                        icov = dense.mask.get(iarr)
+                        if icov is not None:
+                            idx_inb &= icov.ravel()[iflat]
+                        # astype truncates toward zero like the scalar
+                        # executors' int()
+                        coords = (ivals.astype(np.int64) + ref.offset)[
+                            :, None
+                        ] - np.asarray(origin[a], np.int64)
+                    else:
+                        coords = (
+                            pts
+                            + np.asarray(ref.offset_tuple(), np.int64)
+                            - np.asarray(origin[a], np.int64)
+                        )
                     shp = np.asarray(shapes[a], np.int64)
                     inb = np.all((coords >= 0) & (coords < shp), axis=1)
+                    if idx_inb is not None:
+                        inb &= idx_inb
                     flat = np.ravel_multi_index(
                         tuple(
                             np.clip(coords[:, d], 0, shapes[a][d] - 1)

@@ -49,7 +49,7 @@ import types
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.dependence import Dependence
-from repro.core.ir import ArrayRef, LoopProgram
+from repro.core.ir import ArrayRef, LoopProgram, is_indirect
 from repro.core.policy import SccPolicyLike
 
 _PRIMITIVES = (int, float, bool, str, bytes, type(None))
@@ -282,6 +282,18 @@ def compute_fingerprint(fn: object, *, _seen: frozenset = frozenset()) -> Tuple:
 def _ref_sig(ref: Optional[ArrayRef]) -> Optional[Tuple]:
     if ref is None:
         return None
+    if is_indirect(ref):
+        # a[idx[i+o]] + c keys by (target, index array, index offset, +c) —
+        # never by index *contents*: those are store data, and anything
+        # store-dependent (the inspector's instance graph) lives with the
+        # per-bounds tables, not the structural key
+        return (
+            "indirect",
+            ref.array,
+            ref.index.array,
+            ref.index.offset_tuple(),
+            ref.offset,
+        )
     return (ref.array, ref.offset_tuple())
 
 
@@ -308,7 +320,10 @@ def dependence_signature(deps: Sequence[Dependence]) -> Tuple:
     """Order-insensitive canonical form of a dependence set."""
 
     return tuple(
-        sorted((d.kind, d.source, d.sink, d.array, d.distance) for d in deps)
+        sorted(
+            (d.kind, d.source, d.sink, d.array, d.distance, d.nonaffine)
+            for d in deps
+        )
     )
 
 
@@ -330,15 +345,19 @@ def structural_key(
     processors: Optional[Dict[str, object]] = None,
     chunk_limit: Optional[int] = None,
     scc_policy: SccPolicyLike = None,
+    deps: Optional[str] = None,
 ) -> str:
     """The compile-cache key: hash of (statement graph, retained dependence
     set, execution model, SCC partition incl. bounds-free skew candidates,
-    chunk knob, scheduling-policy knob).  Loop bounds do not participate —
-    under ``scc_policy="auto"`` the cost model may pick different strategies
-    for different bounds of one structure, which is exactly why the chosen
-    strategy lives with the per-bounds level tables inside the artifact
-    while the *policy* (and the bounds-free skew matrix each SCC would use)
-    lives here."""
+    chunk knob, scheduling-policy knob, non-affine ``deps`` mode).  Loop
+    bounds do not participate — under ``scc_policy="auto"`` the cost model
+    may pick different strategies for different bounds of one structure,
+    which is exactly why the chosen strategy lives with the per-bounds level
+    tables inside the artifact while the *policy* (and the bounds-free skew
+    matrix each SCC would use) lives here.  ``deps`` is the
+    ``"inspect"``/``"speculate"`` *knob* only — it is structural like
+    ``chunk_limit``; the inspector's store-dependent instance graph never
+    reaches this key (it lives with the per-bounds tables)."""
 
     from repro.core.policy import resolve_policy
     from repro.core.scc import scc_signature
@@ -364,5 +383,6 @@ def structural_key(
             scc_signature(prog, retained, model, processors),
             chunk_limit,
             policy_fp,
+            deps,
         )
     )

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, List, Tuple
 
-from repro.core.ir import LoopProgram, Statement
+from repro.core.ir import LoopProgram, Statement, is_indirect
 
 FLOW = "flow"
 ANTI = "anti"
@@ -38,13 +38,24 @@ CONTROL = "control"
 
 @dataclasses.dataclass(frozen=True)
 class Dependence:
-    """A statement-level dependence with constant distance vector."""
+    """A statement-level dependence with constant distance vector.
+
+    ``nonaffine=True`` marks a *conservative proxy* for a conflict through an
+    indirect subscript (``a[idx[i]]``): the true runtime distance is unknown,
+    so the analyzer emits Δ=1 proxies in both directions (plus the Δ=0
+    program-order case), which transitively serialize every possible runtime
+    distance.  Non-affine proxies are never fed to the elimination
+    algorithms (their distance is not a real constant) and are the exact set
+    the inspector (:mod:`repro.core.inspector`) replaces with instance-level
+    edges under ``deps="inspect"``.
+    """
 
     kind: str
     source: str
     sink: str
     array: str
     distance: Tuple[int, ...]
+    nonaffine: bool = False
 
     # ------------------------------------------------------------------ #
     @property
@@ -67,6 +78,8 @@ class Dependence:
     def pretty(self) -> str:
         d = self.distance[0] if len(self.distance) == 1 else self.distance
         sym = {FLOW: "δf", ANTI: "δa", OUTPUT: "δo", CONTROL: "δc"}[self.kind]
+        if self.nonaffine:
+            sym += "~"  # conservative non-affine proxy, Δ is an upper bound
         return f"{self.source} {sym}({self.array}, Δ={d}) {self.sink}"
 
 
@@ -115,8 +128,46 @@ def _oriented(
     return Dependence(kind_bwd, second.name, first.name, array, _neg(raw))
 
 
+def _nonaffine_proxies(
+    prog: LoopProgram,
+    sa: Statement,
+    sb: Statement,
+    kind_fwd: str,
+    kind_bwd: str,
+    array: str,
+) -> List[Dependence]:
+    """Conservative proxies for a conflict whose distance is not a constant.
+
+    Δ=1 proxies in both directions chain transitively (with the free
+    intra-iteration program order) into a cover of *every* runtime distance;
+    the Δ=0 case between distinct statements follows lexical order so the
+    dswp model (which synchronizes Δ=0 cross-statement deps too) stays sound.
+    ``kind_fwd`` is the dependence kind when ``sa``'s access happens first.
+    """
+
+    out = [
+        Dependence(kind_fwd, sa.name, sb.name, array, (1,), nonaffine=True),
+        Dependence(kind_bwd, sb.name, sa.name, array, (1,), nonaffine=True),
+    ]
+    ia, ib = prog.lexical_index(sa.name), prog.lexical_index(sb.name)
+    if ia < ib:
+        out.append(
+            Dependence(kind_fwd, sa.name, sb.name, array, (0,), nonaffine=True)
+        )
+    elif ib < ia:
+        out.append(
+            Dependence(kind_bwd, sb.name, sa.name, array, (0,), nonaffine=True)
+        )
+    return out
+
+
 def analyze(prog: LoopProgram) -> List[Dependence]:
-    """All flow/anti/output dependences of ``prog`` with constant distances."""
+    """All flow/anti/output dependences of ``prog``.
+
+    Affine conflicting pairs get constant distances; pairs involving an
+    indirect access get non-affine Δ=1/Δ=0 proxies (see
+    :func:`_nonaffine_proxies`).
+    """
 
     deps: List[Dependence] = []
     for sa in prog.statements:
@@ -127,15 +178,29 @@ def analyze(prog: LoopProgram) -> List[Dependence]:
             # arithmetic as a flow dep, but tagged CONTROL; the mirrored
             # guard-read-before-write case is an ordinary anti dependence.
             if sb.guard is not None and sb.guard.array == sa.write.array:
-                raw = tuple(
-                    w - r for w, r in zip(wa, sb.guard.offset_tuple())
-                )
-                d = _oriented(prog, sa, sb, raw, CONTROL, ANTI, sa.write.array)
-                if d is not None:
-                    deps.append(d)
+                if is_indirect(sa.write):
+                    deps.extend(
+                        _nonaffine_proxies(
+                            prog, sa, sb, CONTROL, ANTI, sa.write.array
+                        )
+                    )
+                else:
+                    raw = tuple(
+                        w - r for w, r in zip(wa, sb.guard.offset_tuple())
+                    )
+                    d = _oriented(
+                        prog, sa, sb, raw, CONTROL, ANTI, sa.write.array
+                    )
+                    if d is not None:
+                        deps.append(d)
             # write(sa) vs read(sb): flow if write first, anti if read first
             for ref in sb.reads:
                 if ref.array != sa.write.array:
+                    continue
+                if is_indirect(sa.write) or is_indirect(ref):
+                    deps.extend(
+                        _nonaffine_proxies(prog, sa, sb, FLOW, ANTI, ref.array)
+                    )
                     continue
                 raw = tuple(w - r for w, r in zip(wa, ref.offset_tuple()))
                 d = _oriented(prog, sa, sb, raw, FLOW, ANTI, ref.array)
@@ -144,16 +209,38 @@ def analyze(prog: LoopProgram) -> List[Dependence]:
             # write(sa) vs write(sb): output (count each unordered pair once)
             if sb.write.array == sa.write.array:
                 ia, ib = prog.lexical_index(sa.name), prog.lexical_index(sb.name)
-                if ia < ib or (ia == ib and False):
-                    raw = tuple(
-                        w - v for w, v in zip(wa, sb.write.offset_tuple())
-                    )
-                    d = _oriented(prog, sa, sb, raw, OUTPUT, OUTPUT, sa.write.array)
-                    if d is not None:
-                        deps.append(d)
+                either_indirect = is_indirect(sa.write) or is_indirect(sb.write)
+                if ia < ib:
+                    if either_indirect:
+                        deps.extend(
+                            _nonaffine_proxies(
+                                prog, sa, sb, OUTPUT, OUTPUT, sa.write.array
+                            )
+                        )
+                    else:
+                        raw = tuple(
+                            w - v for w, v in zip(wa, sb.write.offset_tuple())
+                        )
+                        d = _oriented(
+                            prog, sa, sb, raw, OUTPUT, OUTPUT, sa.write.array
+                        )
+                        if d is not None:
+                            deps.append(d)
                 elif ia == ib:
-                    pass  # same statement: self output dep only if distance≠0,
-                    # impossible with a single constant-offset write
+                    # same statement: impossible with a single constant-offset
+                    # write — but an indirect write may revisit a cell, so it
+                    # carries a self output dependence of unknown distance
+                    if is_indirect(sa.write):
+                        deps.append(
+                            Dependence(
+                                OUTPUT,
+                                sa.name,
+                                sa.name,
+                                sa.write.array,
+                                (1,),
+                                nonaffine=True,
+                            )
+                        )
     return _dedup(deps)
 
 
@@ -161,7 +248,7 @@ def _dedup(deps: Iterable[Dependence]) -> List[Dependence]:
     seen = set()
     out: List[Dependence] = []
     for d in deps:
-        key = (d.kind, d.source, d.sink, d.array, d.distance)
+        key = (d.kind, d.source, d.sink, d.array, d.distance, d.nonaffine)
         if key not in seen:
             seen.add(key)
             out.append(d)

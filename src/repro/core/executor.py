@@ -28,7 +28,7 @@ import threading
 import time
 from typing import Dict, Mapping, Optional, Tuple
 
-from repro.core.ir import LoopProgram, run_sequential
+from repro.core.ir import LoopProgram, ref_cell, run_sequential
 from repro.core.sync import SyncProgram
 
 
@@ -138,12 +138,8 @@ def run_threaded(
                 for snd in sync.post_sends.get(s.name, ()):
                     regs.send(snd.reg, it)
                 return
-        reads = [
-            mem[r.array][tuple(x + o for x, o in zip(it, r.offset_tuple()))]
-            for r in s.reads
-        ]
-        widx = tuple(x + o for x, o in zip(it, s.write.offset_tuple()))
-        mem[s.write.array][widx] = s.compute(*reads)
+        reads = [mem[r.array][ref_cell(r, it, mem)] for r in s.reads]
+        mem[s.write.array][ref_cell(s.write, it, mem)] = s.compute(*reads)
         for snd in sync.post_sends.get(s.name, ()):
             regs.send(snd.reg, it)
 
@@ -214,12 +210,8 @@ def run_loops_sequence(
             order = order[::-1]
         for it in order:
             for s in loop.statements:
-                reads = [
-                    mem[r.array][
-                        tuple(x + o for x, o in zip(it, r.offset_tuple()))
-                    ]
-                    for r in s.reads
-                ]
-                widx = tuple(x + o for x, o in zip(it, s.write.offset_tuple()))
-                mem[s.write.array][widx] = s.compute(*reads)
+                reads = [mem[r.array][ref_cell(r, it, mem)] for r in s.reads]
+                mem[s.write.array][ref_cell(s.write, it, mem)] = s.compute(
+                    *reads
+                )
     return mem

@@ -6,6 +6,11 @@ This module defines that IR:
 
   * :class:`ArrayRef`  — an access ``array[i + offset]`` (offset may be
     negative; ``a[i-1]`` is ``ArrayRef("a", -1)``).
+  * :class:`IndirectRef` — a *non-affine* access ``array[idx[i + k] + offset]``
+    through an index array (gather/scatter, sparse matvec, histogram).  The
+    subscript is only known once the index array's contents are — the
+    inspector (:mod:`repro.core.inspector`) evaluates it at plan-per-bounds
+    time; static analysis treats it conservatively.
   * :class:`Statement` — one statement ``S_k``: a single write plus a list of
     reads and an opaque compute function used by the reference executors.
   * :class:`LoopProgram` — ``for i = lo; i < hi; i++ { S1; ...; Sk }``.
@@ -50,6 +55,62 @@ class ArrayRef:
             f"i{k}{o:+d}" if o else f"i{k}" for k, o in enumerate(offs)
         )
         return f"{self.array}[{idx}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class IndirectRef:
+    """A non-affine access ``array[idx[i + index.offset] + offset]``.
+
+    ``index`` is the (affine) access that fetches the subscript from the
+    index array; its value is truncated toward zero (``int()``) and ``offset``
+    added to form the target cell.  Restricted to 1-D loop nests — the
+    paper's non-affine scenarios (gather/scatter, sparse matvec, histogram)
+    are all 1-D.  The index array must not be written anywhere in the loop
+    (the classic inspector–executor requirement: subscripts are computable
+    at loop entry); :class:`LoopProgram` rejects programs that violate it.
+    """
+
+    array: str
+    index: ArrayRef
+    offset: int = 0
+
+    def offset_tuple(self) -> Tuple[int, ...]:
+        """Rank marker only — the *index access* offset, so rank validation
+        and windowing treat the ref as rank-1.  Never use it to compute the
+        target cell; that is :func:`ref_cell`'s job."""
+
+        return self.index.offset_tuple()
+
+    def __str__(self) -> str:  # pragma: no cover - debugging aid
+        o = self.index.offset_tuple()[0]
+        inner = f"i{o:+d}" if o else "i"
+        outer = f"{self.offset:+d}" if self.offset else ""
+        return f"{self.array}[{self.index.array}[{inner}]{outer}]"
+
+
+def is_indirect(ref) -> bool:
+    return isinstance(ref, IndirectRef)
+
+
+def ref_arrays(ref) -> Tuple[str, ...]:
+    """Arrays an access touches: the target and, if indirect, the index."""
+
+    if is_indirect(ref):
+        return (ref.array, ref.index.array)
+    return (ref.array,)
+
+
+def ref_cell(ref, point: Tuple[int, ...], mem: Mapping[str, dict]) -> Tuple[int, ...]:
+    """The store cell an access resolves to at iteration ``point``.
+
+    Affine refs need no memory; indirect refs fetch the subscript from the
+    index array (KeyError on uninitialized index cells, like any read).
+    """
+
+    if is_indirect(ref):
+        iidx = tuple(p + o for p, o in zip(point, ref.index.offset_tuple()))
+        return (int(mem[ref.index.array][iidx]) + ref.offset,)
+    return tuple(p + o for p, o in zip(point, ref.offset_tuple()))
 
 
 ComputeFn = Callable[..., float]
@@ -115,14 +176,35 @@ class LoopProgram:
             self, "bounds", tuple((int(lo), int(hi)) for lo, hi in self.bounds)
         )
         ndim = len(self.bounds)
+        index_arrays: set = set()
+        written: set = set()
         for s in self.statements:
+            if is_indirect(s.guard):
+                raise ValueError(
+                    f"{s.name}: guards must be affine accesses, got {s.guard}"
+                )
             refs = (s.write, *s.reads) + ((s.guard,) if s.guard else ())
             for ref in refs:
+                if is_indirect(ref):
+                    if ndim != 1:
+                        raise ValueError(
+                            f"{s.name}: indirect access {ref} requires a 1-D "
+                            f"loop nest, got rank {ndim}"
+                        )
+                    index_arrays.add(ref.index.array)
                 if len(ref.offset_tuple()) != ndim:
                     raise ValueError(
                         f"{s.name}: access {ref} has rank "
                         f"{len(ref.offset_tuple())} but loop nest has rank {ndim}"
                     )
+            written.add(s.write.array)
+        clobbered = index_arrays & written
+        if clobbered:
+            raise ValueError(
+                f"index array(s) {sorted(clobbered)} are written inside the "
+                f"loop — indirect subscripts must be computable at loop entry "
+                f"(inspector–executor requirement)"
+            )
 
     # ------------------------------------------------------------------ #
     @property
@@ -150,8 +232,29 @@ class LoopProgram:
         for s in self.statements:
             refs = (s.write, *s.reads) + ((s.guard,) if s.guard else ())
             for ref in refs:
-                if ref.array not in seen:
-                    seen.append(ref.array)
+                for arr in ref_arrays(ref):
+                    if arr not in seen:
+                        seen.append(arr)
+        return tuple(seen)
+
+    def has_indirect(self) -> bool:
+        """True iff any access goes through an index array."""
+
+        return any(
+            is_indirect(ref)
+            for s in self.statements
+            for ref in (s.write, *s.reads)
+        )
+
+    def index_arrays(self) -> Tuple[str, ...]:
+        """The index arrays feeding indirect subscripts (loop-invariant by
+        the __post_init__ contract)."""
+
+        seen = []
+        for s in self.statements:
+            for ref in (s.write, *s.reads):
+                if is_indirect(ref) and ref.index.array not in seen:
+                    seen.append(ref.index.array)
         return tuple(seen)
 
     def iterations(self) -> Sequence[Tuple[int, ...]]:
@@ -212,11 +315,8 @@ def run_sequential(prog: LoopProgram, store: Mapping[str, dict] | None = None) -
                 )
                 if not mem[s.guard.array][gidx] > 0:
                     continue
-            reads = [
-                mem[r.array][tuple(p + o for p, o in zip(point, r.offset_tuple()))]
-                for r in s.reads
-            ]
-            widx = tuple(p + o for p, o in zip(point, s.write.offset_tuple()))
+            reads = [mem[r.array][ref_cell(r, point, mem)] for r in s.reads]
+            widx = ref_cell(s.write, point, mem)
             mem[s.write.array][widx] = s.compute(*reads)
     return mem
 

@@ -63,6 +63,7 @@ from typing import (
     Optional,
     Sequence,
     Tuple,
+    Union,
 )
 
 from repro.core.dependence import Dependence, analyze, loop_carried
@@ -265,8 +266,19 @@ def _check_backend_options(
 ELIMINATION_METHODS = ("isd", "pattern", "both", "none")
 EXECUTION_MODELS = ("doall", "dswp", "procmap")
 
+# runtime dependence-resolution modes for non-affine (indirect) accesses:
+# "inspect" schedules from the exact inspector instance graph; "speculate"
+# runs doall-optimistic first and rolls back on a post-hoc validation failure
+DEPS_MODES = ("inspect", "speculate")
+
 # the scheduling knobs a PlanOptions forwards to ``prepare`` at compile time
-SCHEDULING_OPTION_NAMES = ("chunk_limit", "scc_policy", "model", "processors")
+SCHEDULING_OPTION_NAMES = (
+    "chunk_limit",
+    "scc_policy",
+    "model",
+    "processors",
+    "deps",
+)
 
 
 def _validate_chunk_limit(chunk_limit: object) -> None:
@@ -295,6 +307,11 @@ def _validate_scheduling_options(options: Mapping[str, object]) -> None:
             f"unknown execution model {options['model']!r}; expected one of "
             f"{EXECUTION_MODELS}"
         )
+    if "deps" in options and options["deps"] not in DEPS_MODES:
+        raise ValueError(
+            f"unknown deps mode {options['deps']!r}; expected one of "
+            f"{DEPS_MODES}"
+        )
 
 
 # ---------------------------------------------------------------------- #
@@ -312,7 +329,14 @@ class PlanOptions:
     ``method``: ``"isd"`` (transitive reduction), ``"pattern"`` (Li &
     Abu-Sufah matching), ``"both"`` (pattern first — cheap — then ISD on the
     survivors), or ``"none"`` (naive synchronization only).
-    ``deps``: explicit dependences; ``None`` runs the analyzer.
+    ``deps``: explicit dependences; ``None`` runs the analyzer; the strings
+    ``"inspect"``/``"speculate"`` also run the analyzer but additionally
+    forward a runtime dependence-resolution mode for non-affine accesses to
+    the backend — ``"inspect"`` schedules from the exact inspector instance
+    graph (:mod:`repro.core.inspector`), ``"speculate"`` runs the
+    doall-optimistic schedule and rolls back to the conservative one when
+    post-hoc validation against the inspector graph fails.  On programs
+    without indirect accesses both modes degrade to the conservative plan.
     ``merge_sends``: merge compatible sends during optimized insertion.
     ``chunk_limit``/``scc_policy``: recurrence-SCC scheduling knobs,
     forwarded at compile time to backends whose capability contract accepts
@@ -322,7 +346,7 @@ class PlanOptions:
     """
 
     method: str = "isd"
-    deps: Optional[Tuple[Dependence, ...]] = None
+    deps: Union[None, str, Tuple[Dependence, ...]] = None
     merge_sends: bool = False
     chunk_limit: Optional[int] = None
     scc_policy: SccPolicyLike = None
@@ -330,7 +354,13 @@ class PlanOptions:
     processors: Optional[Tuple[Tuple[str, object], ...]] = None
 
     def __post_init__(self) -> None:
-        if self.deps is not None:
+        if isinstance(self.deps, str):
+            if self.deps not in DEPS_MODES:
+                raise ValueError(
+                    f"unknown deps mode {self.deps!r}; expected one of "
+                    f"{DEPS_MODES} (or an explicit dependence sequence)"
+                )
+        elif self.deps is not None:
             object.__setattr__(self, "deps", tuple(self.deps))
         if isinstance(self.processors, Mapping):
             object.__setattr__(
@@ -382,6 +412,8 @@ class PlanOptions:
             out["model"] = self.model
         if self.processors:
             out["processors"] = self.processor_map
+        if isinstance(self.deps, str):
+            out["deps"] = self.deps
         return out
 
 
@@ -418,27 +450,53 @@ def _eliminate(
     model: str = "doall",
     processors: Optional[Dict[str, object]] = None,
 ) -> EliminationResult:
-    if method == "none":
+    # Non-affine proxies carry an unknown true distance: they can neither be
+    # eliminated (a Δ=1 proxy does not prove the runtime distance is
+    # covered) nor serve as covering edges for affine dependences (a
+    # covering path through a proxy may not exist at runtime under
+    # deps="inspect", where proxies are replaced by exact instance edges).
+    # They bypass the algorithms and rejoin the retained set afterwards.
+    nonaffine = tuple(d for d in dep_list if d.nonaffine)
+    affine = [d for d in dep_list if not d.nonaffine]
+
+    def _with_nonaffine(base: EliminationResult) -> EliminationResult:
+        if not nonaffine:
+            return base
+        from repro.core.elimination import synchronized_set
+
+        extra = tuple(synchronized_set(nonaffine, model, processors))
         return EliminationResult(
-            retained=tuple(loop_carried(dep_list)),
-            eliminated=(),
-            witnesses={},
-            method="none",
+            retained=base.retained + extra,
+            eliminated=base.eliminated,
+            witnesses=base.witnesses,
+            method=base.method,
+        )
+
+    if method == "none":
+        return _with_nonaffine(
+            EliminationResult(
+                retained=tuple(loop_carried(affine)),
+                eliminated=(),
+                witnesses={},
+                method="none",
+            )
         )
     if method == "isd":
-        return eliminate_transitive(
-            prog, dep_list, model=model, processors=processors
+        return _with_nonaffine(
+            eliminate_transitive(prog, affine, model=model, processors=processors)
         )
     if method == "pattern":
-        return eliminate_pattern(prog, dep_list)
+        return _with_nonaffine(eliminate_pattern(prog, affine))
     if method == "both":
-        first = eliminate_pattern(prog, dep_list)
+        first = eliminate_pattern(prog, affine)
         second = eliminate_transitive(prog, list(first.retained))
-        return EliminationResult(
-            retained=second.retained,
-            eliminated=first.eliminated + second.eliminated,
-            witnesses=second.witnesses,
-            method="pattern+isd",
+        return _with_nonaffine(
+            EliminationResult(
+                retained=second.retained,
+                eliminated=first.eliminated + second.eliminated,
+                witnesses=second.witnesses,
+                method="pattern+isd",
+            )
         )
     raise ValueError(f"unknown elimination method: {method!r}")
 
@@ -752,7 +810,9 @@ def plan(
         )
 
     dep_list = (
-        list(options.deps) if options.deps is not None else analyze(prog)
+        list(options.deps)
+        if options.deps is not None and not isinstance(options.deps, str)
+        else analyze(prog)
     )
     fiss = fission(prog, dep_list)
     naive = insert_synchronization(prog, dep_list, merge=False)
@@ -797,7 +857,11 @@ register_backend(
     BackendSpec(
         name="threaded",
         prepare=None,
-        accepts=(),  # the paper's machine takes no scheduling knobs
+        # the paper's machine takes no scheduling knobs; it accepts the
+        # "deps" mode as a documented no-op — its conservative send/wait
+        # execution enforces a superset of any inspector graph, so it is the
+        # semantics every inspect/speculate schedule must reproduce
+        accepts=("deps",),
         differential=lambda sync, *, store=None, stalls=None: run_threaded(
             sync, stalls=stalls, store=store, compare=False
         ).store,
@@ -817,8 +881,9 @@ def _wavefront_prepare(
     scc_policy=None,
     model="doall",
     processors=None,
+    deps=None,
 ):
-    return {
+    artifacts: Dict[str, object] = {
         "wavefront": schedule_wavefronts(
             optimized,
             list(retained),
@@ -828,19 +893,83 @@ def _wavefront_prepare(
             scc_policy=scc_policy,
         )
     }
+    if deps is not None and optimized.program.has_indirect():
+        from repro.core.inspector import affine_retained
+
+        # the exact instance graph is store-dependent — run() builds the
+        # final schedule; prepare records the mode, the knobs and (for
+        # speculation) the store-independent optimistic schedule
+        artifacts["deps_mode"] = deps
+        artifacts["retained"] = tuple(retained)
+        artifacts["sched_options"] = {
+            "chunk_limit": chunk_limit,
+            "scc_policy": scc_policy,
+            "model": model,
+            "processors": processors,
+        }
+        if deps == "speculate":
+            artifacts["speculative"] = schedule_wavefronts(
+                optimized,
+                list(affine_retained(retained)),
+                model=model,
+                processors=processors,
+                chunk_limit=chunk_limit,
+                scc_policy=scc_policy,
+            )
+    return artifacts
 
 
 def _wavefront_run(sync, artifacts, *, store=None, stalls=None):
-    return run_wavefront(
-        sync, schedule=artifacts.get("wavefront"), store=store, compare=False
-    ).store
+    mode = artifacts.get("deps_mode")
+    if mode is None:
+        return run_wavefront(
+            sync, schedule=artifacts.get("wavefront"), store=store, compare=False
+        ).store
+
+    from repro.core.inspector import (
+        affine_retained,
+        inspect_dependences,
+        speculation_violations,
+    )
+    from repro.core.wavefront import schedule_levels
+
+    prog = sync.program
+    init = {a: dict(c) for a, c in (store or prog.initial_store()).items()}
+    inspection = inspect_dependences(prog, init)
+    opts = artifacts.get("sched_options") or {}
+    if mode == "speculate":
+        speculative = artifacts["speculative"]
+        out = run_wavefront(
+            sync, schedule=speculative, store=init, compare=False
+        )
+        if not speculation_violations(
+            prog, inspection.edges, speculative.level_of()
+        ):
+            return out.store
+        # rollback: the speculative result is discarded; re-execute the
+        # conservative hybrid schedule from the untouched initial image
+        return run_wavefront(
+            sync, schedule=artifacts["wavefront"], store=init, compare=False
+        ).store
+    # mode == "inspect": exact per-store schedule — conservative proxies
+    # replaced by the inspector's instance edges
+    exact = schedule_levels(
+        prog,
+        list(affine_retained(artifacts["retained"])),
+        model=opts.get("model", "doall"),
+        processors=opts.get("processors"),
+        chunk_limit=opts.get("chunk_limit"),
+        scc_policy=opts.get("scc_policy"),
+        instance_edges=inspection.edges,
+    )
+    return run_wavefront(sync, schedule=exact, store=init, compare=False).store
 
 
 register_backend(
     BackendSpec(
         name="wavefront",
         prepare=_wavefront_prepare,
-        accepts=("chunk_limit", "scc_policy", "model", "processors"),
+        accepts=("chunk_limit", "scc_policy", "model", "processors", "deps"),
         differential=lambda sync, *, store=None, stalls=None: run_wavefront(
             sync, store=store, compare=False
         ).store,

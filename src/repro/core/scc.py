@@ -360,6 +360,7 @@ def analyze_sccs(
     chunk_limit: Optional[int] = None,
     scc_policy: SccPolicyLike = None,
     level_cost: Optional[LevelCostFn] = None,
+    instance_edges: Optional[Sequence[Tuple[Instance, Instance]]] = None,
 ) -> SccPartition:
     """Condense + classify; validates the retained set first (may raise).
 
@@ -373,6 +374,12 @@ def analyze_sccs(
     (:attr:`~repro.core.parallelizer.BackendSpec.level_cost`), consulted by
     the default cost model only — never by forced strategies or explicit
     policy instances.
+
+    ``instance_edges`` (the inspector's exact runtime dependence graph) is
+    projected onto statements before condensation: instance conflicts can
+    run *both* directions between two statements, so leaving them out could
+    place mutually dependent statements in separate SCCs and break the
+    condensation's topological-order invariant downstream.
     """
 
     policy = resolve_policy(scc_policy, level_cost=level_cost)
@@ -386,6 +393,10 @@ def analyze_sccs(
         adj[d.source].add(d.sink)
     for a, b, _carried in free:
         adj[a].add(b)
+    if instance_edges:
+        for (su, _itu), (sv, _itv) in instance_edges:
+            if su != sv:
+                adj[su].add(sv)
 
     comps = tarjan_sccs(prog.names, adj)
     member_of: Dict[str, int] = {}
@@ -511,6 +522,7 @@ def hybrid_levels(
     chunk_limit: Optional[int] = None,
     scc_policy: SccPolicyLike = None,
     level_cost: Optional[LevelCostFn] = None,
+    instance_edges: Optional[Sequence[Tuple[Instance, Instance]]] = None,
 ) -> Tuple[List[Dict[str, List[Tuple[int, ...]]]], SccPartition]:
     """Longest-path layering over mixed instance/chunk scheduling units.
 
@@ -542,7 +554,13 @@ def hybrid_levels(
         across iterations without reordering within one;
       * the unit graph is acyclic: every edge advances the sequential
         (iteration, lexical position) order, and chunks of one SCC are
-        totally ordered by construction.
+        totally ordered by construction;
+      * inspector ``instance_edges`` run strictly forward in sequential
+        order and join the condensation at statement granularity (see
+        :func:`analyze_sccs`), so both-direction instance conflicts merge
+        into one SCC and cannot close a cross-unit cycle; an instance edge
+        that would land *inside* one chunk span shrinks that SCC's chunk to
+        1 (always sound — smaller chunks only serialize more).
     """
 
     part = analyze_sccs(
@@ -553,6 +571,7 @@ def hybrid_levels(
         chunk_limit=chunk_limit,
         scc_policy=scc_policy,
         level_cost=level_cost,
+        instance_edges=instance_edges,
     )
     bounds = prog.bounds
     deps = [d for d in retained if not _vacuous(d.distance, bounds)]
@@ -578,6 +597,21 @@ def hybrid_levels(
         if info is not None:
             return ("c", info.id, pos(it) // info.chunk)
         return ("i", stmt, it)
+
+    if instance_edges and chunk_info:
+        # an exact instance edge batched away inside one chunk span would be
+        # violated — shrink those SCCs to chunk 1 (same-iteration edges are
+        # never emitted by the inspector, so chunk 1 can hold no edge)
+        shrink: Set[int] = set()
+        for (su, itu), (sv, itv) in instance_edges:
+            cu = member_of.get(su)
+            if cu is None or cu != member_of.get(sv):
+                continue
+            info = chunk_info.get(cu)
+            if info is not None and pos(itu) // info.chunk == pos(itv) // info.chunk:
+                shrink.add(cu)
+        for cid in shrink:
+            chunk_info[cid] = dataclasses.replace(chunk_info[cid], chunk=1)
 
     in_space = set(pts)
     adj: Dict[Unit, Set[Unit]] = {}
@@ -628,6 +662,12 @@ def hybrid_levels(
             dst = tuple(x + dd for x, dd in zip(it, d.distance))
             if dst in in_space:
                 add(unit(d.source, it), unit(d.sink, dst))
+
+    # exact inspector instance edges (runtime non-affine dependences)
+    if instance_edges:
+        for (su, itu), (sv, itv) in instance_edges:
+            if itu in in_space and itv in in_space:
+                add(unit(su, itu), unit(sv, itv))
 
     # per-SCC dswp lanes: each statement of the SCC is one sequential
     # processor, so its lexicographic-successor order is enforced for free

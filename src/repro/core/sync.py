@@ -179,11 +179,19 @@ def strip_dependences(
     """
 
     gone = {
-        (d.source, d.sink, d.array, d.distance, d.kind) for d in eliminated
+        (d.source, d.sink, d.array, d.distance, d.kind, d.nonaffine)
+        for d in eliminated
     }
 
     def keep(d: Dependence) -> bool:
-        return (d.source, d.sink, d.array, d.distance, d.kind) not in gone
+        return (
+            d.source,
+            d.sink,
+            d.array,
+            d.distance,
+            d.kind,
+            d.nonaffine,
+        ) not in gone
 
     registers = {
         r: tuple(d for d in ds if keep(d)) for r, ds in sync.registers.items()

@@ -59,7 +59,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.dependence import Dependence
-from repro.core.ir import LoopProgram, run_sequential
+from repro.core.ir import LoopProgram, is_indirect, run_sequential
 from repro.core.isd import Instance, build_isd
 from repro.core.policy import LevelCostFn, SccPolicyLike
 from repro.core.scc import (
@@ -173,7 +173,7 @@ def _sync_dependences(sync: SyncProgram) -> List[Dependence]:
     seen = set()
     for ds in sync.registers.values():
         for d in ds:
-            key = (d.kind, d.source, d.sink, d.array, d.distance)
+            key = (d.kind, d.source, d.sink, d.array, d.distance, d.nonaffine)
             if key not in seen:
                 seen.add(key)
                 out.append(d)
@@ -234,12 +234,19 @@ def schedule_levels(
     chunk_limit: Optional[int] = None,
     scc_policy: "SccPolicyLike" = None,
     level_cost: Optional["LevelCostFn"] = None,
+    instance_edges: Optional[Sequence[Tuple[Instance, Instance]]] = None,
 ) -> WavefrontSchedule:
     """Layer a bare :class:`LoopProgram` given its retained dependences.
 
     The sync-program-independent core of :func:`schedule_wavefronts`; used
     directly by the Pallas K-loop plan, whose enforced orders come from an
     explicit processor map rather than a send/wait program.
+
+    ``instance_edges`` injects *exact* instance-level orders — the
+    inspector's runtime dependence graph for non-affine accesses
+    (:func:`repro.core.inspector.inspect_dependences`) — on top of the
+    statement-level retained set.  Pass the affine retained set alongside
+    them: the inspector is authoritative only for the indirect array set.
 
     Per-dimension non-negative retained sets take the classic longest-path
     ISD layering below; sets with mixed-sign distance components route
@@ -258,6 +265,12 @@ def schedule_levels(
     deps = list(retained)
     validate_retained(prog, deps)  # WavefrontError before any execution
 
+    extra: Dict[Instance, List[Instance]] = {}
+    if instance_edges:
+        for u, v in instance_edges:
+            if u != v:
+                extra.setdefault(u, []).append(v)
+
     if any(x < 0 for d in deps for x in d.distance):
         raw, part = hybrid_levels(
             prog,
@@ -267,6 +280,7 @@ def schedule_levels(
             chunk_limit=chunk_limit,
             scc_policy=scc_policy,
             level_cost=level_cost,
+            instance_edges=instance_edges,
         )
         return WavefrontSchedule(
             program=prog,
@@ -292,6 +306,9 @@ def schedule_levels(
     for u, succs in isd.adj.items():
         for v, _tag in succs:
             indeg[v] = indeg.get(v, 0) + 1
+    for u, vs in extra.items():
+        for v in vs:
+            indeg[v] = indeg.get(v, 0) + 1
 
     level: Dict[Instance, int] = {}
     frontier = [v for v in nodes if indeg[v] == 0]
@@ -303,6 +320,11 @@ def schedule_levels(
         for u in frontier:
             done += 1
             for v, _tag in isd.successors(u):
+                level[v] = max(level.get(v, 0), level[u] + 1)
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    nxt.append(v)
+            for v in extra.get(u, ()):
                 level[v] = max(level.get(v, 0), level[u] + 1)
                 indeg[v] -= 1
                 if indeg[v] == 0:
@@ -502,19 +524,38 @@ def run_wavefront(
     # Per-statement lowering, hoisted out of the level loop, for both paths:
     # store-relative scalar offsets (narrow groups) and absolute offset
     # arrays (wide groups), so the hot loop is pure index arithmetic.
-    lowered = {}
-    for s in prog.statements:
-        rel = lambda ref: tuple(
+    # Indirect accesses carry the index array's lowering instead — their
+    # target cell is resolved per instance from the store's index contents.
+    def _rel(ref):
+        return tuple(
             o - l for o, l in zip(ref.offset_tuple(), origin[ref.array])
         )
-        arr_off = lambda ref: np.asarray(ref.offset_tuple(), np.int64)
+
+    def _lower_ref(ref):
+        if is_indirect(ref):
+            idx = ref.index
+            return (
+                "ind",
+                ref.array,
+                idx.array,
+                _rel(idx),
+                np.asarray(idx.offset_tuple(), np.int64),
+                ref.offset,
+            )
+        return (
+            "aff",
+            ref.array,
+            _rel(ref),
+            np.asarray(ref.offset_tuple(), np.int64),
+        )
+
+    lowered = {}
+    for s in prog.statements:
         lowered[s.name] = (
             s,
-            (s.write.array, rel(s.write), arr_off(s.write)),
-            tuple((r.array, rel(r), arr_off(r)) for r in s.reads),
-            (s.guard.array, rel(s.guard), arr_off(s.guard))
-            if s.guard is not None
-            else None,
+            _lower_ref(s.write),
+            tuple(_lower_ref(r) for r in s.reads),
+            _lower_ref(s.guard) if s.guard is not None else None,
         )
 
     masks = mem.mask
@@ -536,21 +577,48 @@ def run_wavefront(
             )
         return data[arr][idx]
 
+    def scalar_cell_of(acc, it) -> tuple:
+        """Dense (store-relative) cell of one access at iteration ``it``."""
+
+        if acc[0] == "aff":
+            return tuple(x + o for x, o in zip(it, acc[2]))
+        _tag, arr, iarr, irel, _ioff, const = acc
+        # int() truncates toward zero — astype(int64) on the wide path agrees
+        j = int(scalar_cell(iarr, it, irel)) + const
+        return (j - origin[arr][0],)
+
+    def wide_pts(acc, pts: np.ndarray) -> np.ndarray:
+        """Absolute coordinates of one access for every point in ``pts``."""
+
+        if acc[0] == "aff":
+            return pts + acc[3]
+        _tag, _arr, iarr, _irel, ioff, const = acc
+        ivals = mem.gather(iarr, pts + ioff)
+        return (ivals.astype(np.int64) + const)[:, None]
+
     for groups in sched.levels:
         for g in groups:
-            stmt, (warr, woff, woff_np), reads_l, guard_l = lowered[g.statement]
+            stmt, w_l, reads_l, guard_l = lowered[g.statement]
+            warr = w_l[1]
             width = len(g.iterations)
             if width <= 4:
                 # narrow wavefront: scalar evaluation beats gather overhead
                 for it in g.iterations:
                     if guard_l is not None and not (
-                        scalar_cell(guard_l[0], it, guard_l[1]) > 0
+                        scalar_cell(guard_l[1], it, guard_l[2]) > 0
                     ):
                         continue
                     vals = stmt.compute(
-                        *(scalar_cell(a, it, off) for a, off, _ in reads_l)
+                        *(
+                            scalar_cell(acc[1], it, acc[2])
+                            if acc[0] == "aff"
+                            else scalar_cell(
+                                acc[1], scalar_cell_of(acc, it), (0,)
+                            )
+                            for acc in reads_l
+                        )
                     )
-                    widx = tuple(x + o for x, o in zip(it, woff))
+                    widx = scalar_cell_of(w_l, it)
                     wshape = data[warr].shape
                     if any(
                         x < 0 or x >= n for x, n in zip(widx, wshape)
@@ -566,15 +634,13 @@ def run_wavefront(
                 continue
             pts = np.asarray(g.iterations, dtype=np.int64)
             if guard_l is not None:
-                mask = mem.gather(guard_l[0], pts + guard_l[2]) > 0
+                mask = mem.gather(guard_l[1], pts + guard_l[3]) > 0
                 pts = pts[mask]
                 if pts.shape[0] == 0:
                     continue
-            reads = [
-                mem.gather(arr, pts + off_np) for arr, _, off_np in reads_l
-            ]
+            reads = [mem.gather(acc[1], wide_pts(acc, pts)) for acc in reads_l]
             vals = _batched_compute(stmt, reads, pts.shape[0])
-            mem.scatter(warr, pts + woff_np, vals)
+            mem.scatter(warr, wide_pts(w_l, pts), vals)
 
     result = mem.to_dicts()
     matches = True

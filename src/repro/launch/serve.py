@@ -107,6 +107,36 @@ def _scan_plan(slots: int, horizon: int):
     return plan(prog, method="isd")
 
 
+@functools.lru_cache(maxsize=16)
+def _route_plan(tokens: int):
+    """Expert-routing histogram — the serving loop's *non-affine* shape.
+
+    Each decoded token scatters into its expert's bin: ``h[bin[i]] += w[i]``
+    with ``bin`` only known at runtime (it is this wave's sampled tokens).
+    Planned under ``deps="inspect"``: the static analyzer can only emit the
+    serializing proxy chain, the inspector resolves the actual conflicts per
+    wave.  One structural artifact serves every wave (the deps mode is part
+    of the structural key); each distinct routing pattern adds one
+    content-keyed per-bounds table entry beside it.
+    """
+
+    from repro.core import PlanOptions, histogram, plan
+
+    return plan(histogram(max(2, tokens)), PlanOptions(deps="inspect"))
+
+
+@functools.lru_cache(maxsize=16)
+def _rescore_plan(tokens: int):
+    """Sparse-matvec rescore ``y[row[k]] += v[k]*x[col[k]]`` under
+    ``deps="speculate"``: waves whose rows happen to be conflict-free keep
+    the optimistic doall result; a conflicting wave validates against the
+    inspector graph, rolls back, and re-runs conservatively."""
+
+    from repro.core import PlanOptions, plan, sparse_matvec
+
+    return plan(sparse_matvec(max(2, tokens)), PlanOptions(deps="speculate"))
+
+
 def plan_wave_sync(max_new: int):
     """One wave's decode-chain report: plan memo + structural compile cache."""
 
@@ -117,6 +147,47 @@ def plan_scan_sync(slots: int, horizon: int):
     """One wave's rescoring-scan report (hybrid artifact, see _scan_plan)."""
 
     return _scan_plan(slots, horizon).compile("xla").report()
+
+
+def plan_route_sync(tokens: int):
+    """One wave's routing-histogram Executable (non-affine, deps="inspect")."""
+
+    return _route_plan(tokens).compile("xla")
+
+
+def plan_rescore_sync(tokens: int):
+    """One wave's sparse-rescore Executable (non-affine, deps="speculate")."""
+
+    return _rescore_plan(tokens).compile("xla")
+
+
+def run_nonaffine_wave(route_exe, rescore_exe, sampled: List[int], bins: int):
+    """Execute the wave's non-affine workloads with this wave's runtime
+    index contents; returns (route store, rescore store) after asserting
+    both bit-equal the sequential oracle."""
+
+    from repro.core import indexed_store, run_sequential
+
+    route_prog = route_exe.plan.program
+    (lo, hi), = route_prog.bounds
+    n = hi - lo
+    pattern = [sampled[k % len(sampled)] % bins for k in range(n)]
+    store = indexed_store(route_prog, {"bin": pattern})
+    init = {a: dict(c) for a, c in store.items()}
+    routed = route_exe.run(store=init)
+    assert routed == run_sequential(route_prog, init)
+
+    rescore_prog = rescore_exe.plan.program
+    (lo, hi), = rescore_prog.bounds
+    n = hi - lo
+    rows = [sampled[k % len(sampled)] % max(2, n // 2) for k in range(n)]
+    store = indexed_store(
+        rescore_prog, {"row": rows, "col": list(range(n))}
+    )
+    init = {a: dict(c) for a, c in store.items()}
+    rescored = rescore_exe.run(store=init)
+    assert rescored == run_sequential(rescore_prog, init)
+    return routed, rescored
 
 
 def plan_wave(
@@ -139,7 +210,14 @@ def plan_wave(
             return plan_wave(max_new, slots, pool=own)
     f_decode = pool.submit(plan_wave_sync, max_new)
     f_scan = pool.submit(plan_scan_sync, slots, max_new)
-    return f_decode.result(), f_scan.result()
+    f_route = pool.submit(plan_route_sync, 2 * slots)
+    f_rescore = pool.submit(plan_rescore_sync, 2 * slots)
+    return (
+        f_decode.result(),
+        f_scan.result(),
+        f_route.result(),
+        f_rescore.result(),
+    )
 
 
 def main() -> None:
@@ -189,6 +267,7 @@ def main() -> None:
     decoded_tokens = 0
     waves = 0
     sync_plan = scan_plan = None
+    route_exe = rescore_exe = None
     with concurrent.futures.ThreadPoolExecutor(
         max_workers=2, thread_name_prefix="sync-planner"
     ) as planner:
@@ -198,7 +277,9 @@ def main() -> None:
             # re-plan this wave's sync concurrently (acyclic decode chain +
             # the recurrence-bearing rescoring scan): structural-cache hits
             # on every wave after the first (same dependence structures)
-            sync_plan, scan_plan = plan_wave(args.max_new, B, pool=planner)
+            sync_plan, scan_plan, route_exe, rescore_exe = plan_wave(
+                args.max_new, B, pool=planner
+            )
             waves += 1
             while len(active) < B:  # pad the batch with a dummy copy
                 active.append(
@@ -227,6 +308,12 @@ def main() -> None:
                     if r.rid >= 0 and not r.done:
                         r.generated.append(int(t))
                         decoded_tokens += 1
+            # non-affine wave workloads: route this wave's sampled tokens
+            # through the inspector-planned histogram and the speculative
+            # sparse rescore, index contents = actual runtime values
+            run_nonaffine_wave(
+                route_exe, rescore_exe, cur[:, 0].tolist(), bins=B
+            )
             done.extend(r for r in active if r.rid >= 0)
 
     dt = time.perf_counter() - t0
@@ -249,6 +336,15 @@ def main() -> None:
             f"cyclic scan plan: {waves} waves -> hybrid artifact "
             f"(key {scan_plan.compiled.key[:12]}, strategy={rec['strategy']}, "
             f"statements={rec['statements']})"
+        )
+    if route_exe is not None and rescore_exe is not None:
+        from repro.core import inspector_cache_stats
+
+        print(
+            f"non-affine wave workloads: routing histogram "
+            f"(deps='inspect', key {route_exe.compiled.key[:12]}) + sparse "
+            f"rescore (deps='speculate', key {rescore_exe.compiled.key[:12]})"
+            f", inspector memo {inspector_cache_stats()}"
         )
     print("sample:", done[0].rid, done[0].generated[:10])
 

@@ -48,6 +48,11 @@ except ImportError:  # pragma: no cover - exercised only without the extra
         return lambda fn: fn
 
     def given(*args, **kwargs):
-        return pytest.mark.skip(reason="hypothesis not installed")
+        return pytest.mark.skip(
+            reason=(
+                "hypothesis not installed — install the 'test' extra "
+                "(pip install -e '.[test]') to run property-based tests"
+            )
+        )
 
 __all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "settings", "st"]

@@ -1,0 +1,267 @@
+"""Shared example-program corpus for the differential test matrix.
+
+One registry instead of three private copies: ``tests/test_wavefront.py``,
+``tests/test_cyclic.py`` and ``tests/test_paper_regression.py`` historically
+each grew their own program lists; any new program family (most recently the
+non-affine inspector set) had to be added in several places or silently
+missed a backend.  Everything the oracle harness (``tests/oracle.py``) should
+sweep now lives here:
+
+  * ``PAPER_PROGRAMS``        — the paper's Alg. 1 / Alg. 4 / Alg. 6 loops;
+  * ``DIFFERENTIAL_PROGRAMS`` — paper loops + 2-D distances, guards,
+    stencils, doall and seeded-random programs (the classic wavefront set);
+  * ``CYCLIC_PROGRAMS``       — mixed-Δ recurrences exercising the
+    SCC-condensed hybrid scheduler;
+  * ``NONAFFINE_PROGRAMS``    — indirect-subscript programs (gather/scatter,
+    sparse matvec, histogram) whose exact dependences only the runtime
+    inspector (:mod:`repro.core.inspector`) can resolve;
+  * ``ALL_PROGRAMS``          — the union, unique by name.
+
+Builders stay importable individually (several tests re-instantiate them at
+other bounds); entries are ``(name, LoopProgram)`` pairs ready for
+``pytest.mark.parametrize(..., ids=...)``.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    gather_scatter,
+    histogram,
+    paper_alg1,
+    paper_alg4,
+    paper_alg6,
+    sparse_matvec,
+)
+
+Corpus = List[Tuple[str, LoopProgram]]
+
+
+# ---------------------------------------------------------------------- #
+# Affine builders (formerly private to test_wavefront.py)
+# ---------------------------------------------------------------------- #
+
+def random_program(seed: int, n_stmt: int = 4, n_iter: int = 6) -> LoopProgram:
+    rng = random.Random(seed)
+    arrays = ["a", "b", "c", "d"]
+    stmts = []
+    for k in range(n_stmt):
+        reads = tuple(
+            ArrayRef(rng.choice(arrays), -rng.randint(0, 3))
+            for _ in range(rng.randint(0, 3))
+        )
+        stmts.append(Statement(f"S{k+1}", ArrayRef(rng.choice(arrays), 0), reads))
+    return LoopProgram(statements=tuple(stmts), bounds=((1, 1 + n_iter),))
+
+
+def guarded_program() -> LoopProgram:
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("p", 0), (ArrayRef("p", -1),)),
+            Statement(
+                "S2", ArrayRef("a", 0), (ArrayRef("a", -1),), guard=ArrayRef("p", -1)
+            ),
+        ),
+        bounds=((1, 7),),
+    )
+
+
+def distance_2d() -> LoopProgram:
+    """2-D distance case: (1,1) dep covered by (1,0)+(0,1) self-deps."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (-1, 0)), ArrayRef("a", (0, -1))),
+            ),
+            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (-1, -1)),)),
+        ),
+        bounds=((0, 4), (0, 4)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Cyclic / mixed-Δ builders (formerly private to test_cyclic.py)
+# ---------------------------------------------------------------------- #
+
+def skew_recurrence(ni=5, nj=5):
+    """a[i,j] = f(a[i-1,j+1]): mixed-sign (1,-1) self-recurrence; the hybrid
+    runs it as a chunked DOACROSS of width nj-1."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def mixed_cycle_pm1():
+    """The acceptance example: retained {Δ components +1, -1} closing a
+    statement cycle — S1 -> S2 with (0,1), S2 -> S1 with (1,-1)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 1)),)),
+            Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+        ),
+        bounds=((0, 4), (0, 4)),
+    )
+
+
+def skew_pipeline():
+    """Recurrence SCC + downstream DOALL consumer (cross-SCC pipelining)."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
+            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (0, 0)),)),
+        ),
+        bounds=((0, 5), (0, 6)),
+    )
+
+
+def double_skew():
+    """Two carried mixed-sign deps with different linearized distances —
+    the chunk must follow the minimum."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (-1, 2)), ArrayRef("a", (-1, -1))),
+            ),
+        ),
+        bounds=((0, 5), (0, 6)),
+    )
+
+
+def guarded_recurrence():
+    """Mixed-sign recurrence under a data-dependent guard: the guard path
+    must survive the nested-fori_loop lowering too."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("p", (0, 0)), (ArrayRef("p", (-1, 1)),)),
+            Statement(
+                "S2",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (-1, 1)),),
+                guard=ArrayRef("p", (0, 0)),
+            ),
+        ),
+        bounds=((0, 4), (0, 5)),
+    )
+
+
+def producer_into_cycle():
+    """Acyclic producer feeding a two-statement mixed-sign cycle."""
+
+    return LoopProgram(
+        statements=(
+            Statement("S1", ArrayRef("d", (0, 0)), ()),
+            Statement(
+                "S2",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("b", (-1, 1)), ArrayRef("d", (0, 0))),
+            ),
+            Statement("S3", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+        ),
+        bounds=((0, 4), (0, 4)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Registries
+# ---------------------------------------------------------------------- #
+
+PAPER_PROGRAMS: Corpus = [
+    ("alg1", paper_alg1(8)),
+    ("alg4_the_alg5_loop", paper_alg4(8)),
+    ("alg6", paper_alg6(8)),
+]
+
+DIFFERENTIAL_PROGRAMS: Corpus = [
+    *PAPER_PROGRAMS,
+    ("distance_2d", distance_2d()),
+    ("guarded", guarded_program()),
+    (
+        "doall_parallel",
+        LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", 0), (ArrayRef("b", 0),)),
+                Statement("S2", ArrayRef("c", 0), (ArrayRef("a", 0),)),
+            ),
+            bounds=((0, 9),),
+        ),
+    ),
+    (
+        "stencil_delta3",
+        LoopProgram(
+            statements=(
+                Statement(
+                    "S1", ArrayRef("a", 0), (ArrayRef("a", -1), ArrayRef("a", -3))
+                ),
+            ),
+            bounds=((1, 9),),
+        ),
+    ),
+    (
+        "nest_2d_cross",
+        LoopProgram(
+            statements=(
+                Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 0)),)),
+                Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
+            ),
+            bounds=((0, 3), (0, 3)),
+        ),
+    ),
+    ("random_0", random_program(0)),
+    ("random_1", random_program(1)),
+    ("random_2", random_program(2, n_stmt=3, n_iter=5)),
+    ("random_3", random_program(3, n_stmt=2, n_iter=8)),
+]
+
+CYCLIC_PROGRAMS: Corpus = [
+    ("paper_alg4_cyclic_isd", paper_alg4(8)),
+    ("skew_recurrence", skew_recurrence()),
+    ("mixed_cycle_pm1", mixed_cycle_pm1()),
+    ("skew_pipeline", skew_pipeline()),
+    ("double_skew", double_skew()),
+    ("guarded_recurrence", guarded_recurrence()),
+    ("producer_into_cycle", producer_into_cycle()),
+]
+
+# Indirect-subscript programs: the static analyzer can only emit conservative
+# serializing proxies for these; exact parallelism needs the runtime
+# inspector.  The default initial_store() hash values truncate into the
+# pad-8 index box (see repro.core.inspector.indexed_store), so the oracle
+# matrix runs them unmodified.
+NONAFFINE_PROGRAMS: Corpus = [
+    ("gather_scatter", gather_scatter(8)),
+    ("sparse_matvec", sparse_matvec(8)),
+    ("histogram", histogram(8)),
+]
+
+
+def _unique_by_name(*corpora: Corpus) -> Corpus:
+    seen, out = set(), []
+    for corpus in corpora:
+        for name, prog in corpus:
+            if name not in seen:
+                seen.add(name)
+                out.append((name, prog))
+    return out
+
+
+ALL_PROGRAMS: Corpus = _unique_by_name(
+    DIFFERENTIAL_PROGRAMS, CYCLIC_PROGRAMS, NONAFFINE_PROGRAMS
+)

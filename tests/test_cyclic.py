@@ -20,117 +20,18 @@ import pytest
 
 from _hypothesis_compat import HealthCheck, given, settings, st
 from oracle import assert_equivalent
+from programs import CYCLIC_PROGRAMS, mixed_cycle_pm1, skew_recurrence
 from repro.core import (
     ArrayRef,
     LoopProgram,
     Statement,
     analyze,
-    paper_alg4,
     plan,
     run_threaded,
     run_wavefront,
 )
 
 ARRAYS = ["a", "b", "c", "d"]
-
-
-def skew_recurrence(ni=5, nj=5):
-    """a[i,j] = f(a[i-1,j+1]): mixed-sign (1,-1) self-recurrence; the hybrid
-    runs it as a chunked DOACROSS of width nj-1."""
-
-    return LoopProgram(
-        statements=(
-            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
-        ),
-        bounds=((0, ni), (0, nj)),
-    )
-
-
-def mixed_cycle_pm1():
-    """The acceptance example: retained {Δ components +1, -1} closing a
-    statement cycle — S1 -> S2 with (0,1), S2 -> S1 with (1,-1)."""
-
-    return LoopProgram(
-        statements=(
-            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 1)),)),
-            Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
-        ),
-        bounds=((0, 4), (0, 4)),
-    )
-
-
-def skew_pipeline():
-    """Recurrence SCC + downstream DOALL consumer (cross-SCC pipelining)."""
-
-    return LoopProgram(
-        statements=(
-            Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("a", (-1, 1)),)),
-            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (0, 0)),)),
-        ),
-        bounds=((0, 5), (0, 6)),
-    )
-
-
-def double_skew():
-    """Two carried mixed-sign deps with different linearized distances —
-    the chunk must follow the minimum."""
-
-    return LoopProgram(
-        statements=(
-            Statement(
-                "S1",
-                ArrayRef("a", (0, 0)),
-                (ArrayRef("a", (-1, 2)), ArrayRef("a", (-1, -1))),
-            ),
-        ),
-        bounds=((0, 5), (0, 6)),
-    )
-
-
-def guarded_recurrence():
-    """Mixed-sign recurrence under a data-dependent guard: the guard path
-    must survive the nested-fori_loop lowering too."""
-
-    return LoopProgram(
-        statements=(
-            Statement("S1", ArrayRef("p", (0, 0)), (ArrayRef("p", (-1, 1)),)),
-            Statement(
-                "S2",
-                ArrayRef("a", (0, 0)),
-                (ArrayRef("a", (-1, 1)),),
-                guard=ArrayRef("p", (0, 0)),
-            ),
-        ),
-        bounds=((0, 4), (0, 5)),
-    )
-
-
-def producer_into_cycle():
-    """Acyclic producer feeding a two-statement mixed-sign cycle."""
-
-    return LoopProgram(
-        statements=(
-            Statement("S1", ArrayRef("d", (0, 0)), ()),
-            Statement(
-                "S2",
-                ArrayRef("a", (0, 0)),
-                (ArrayRef("b", (-1, 1)), ArrayRef("d", (0, 0))),
-            ),
-            Statement("S3", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
-        ),
-        bounds=((0, 4), (0, 4)),
-    )
-
-
-CYCLIC_PROGRAMS = [
-    ("paper_alg4_cyclic_isd", paper_alg4(8)),
-    ("skew_recurrence", skew_recurrence()),
-    ("mixed_cycle_pm1", mixed_cycle_pm1()),
-    ("skew_pipeline", skew_pipeline()),
-    ("double_skew", double_skew()),
-    ("guarded_recurrence", guarded_recurrence()),
-    ("producer_into_cycle", producer_into_cycle()),
-]
 
 
 class TestCyclicDifferential:

@@ -81,12 +81,17 @@ def test_serve_concurrent_wave_planning_pairs_decode_and_scan():
     serve = importlib.import_module("repro.launch.serve")
     clear_compile_cache()
     for _ in range(3):
-        decode_plan, scan_plan = serve.plan_wave(4, 3)
+        decode_plan, scan_plan, route_exe, rescore_exe = serve.plan_wave(4, 3)
     assert decode_plan.summary()["scc"]["recurrences"] == []
     assert scan_plan.summary()["scc"]["recurrences"]
+    # the non-affine wave workloads ride the same structural cache: the
+    # deps mode is part of the key, so inspect/speculate artifacts are
+    # their own (single) entries
+    assert route_exe.plan.options.deps == "inspect"
+    assert rescore_exe.plan.options.deps == "speculate"
     stats = compile_cache_stats()
-    assert stats["misses"] == 2  # one per structure, first wave only
-    assert stats["hits"] == 4  # two hits per subsequent wave
+    assert stats["misses"] == 4  # one per structure, first wave only
+    assert stats["hits"] == 8  # four hits per subsequent wave
 
 
 @pytest.mark.slow

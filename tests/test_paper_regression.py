@@ -10,7 +10,10 @@ stripping shows up as a diff against the paper, not as a silent behavior
 change.  The optimized program is then executed on all three backends.
 """
 
+import pytest
+
 from oracle import assert_equivalent
+from programs import PAPER_PROGRAMS
 from repro.core import (
     eliminate_transitive,
     insert_synchronization,
@@ -119,5 +122,8 @@ class TestAlg6Golden:
         lvl = rep.wavefront.level_of()
         assert all(lvl[("S1", (i,))] == 0 for i in range(1, 8))
 
-    def test_differential_equivalence(self):
-        assert_equivalent(paper_alg6(8))
+    @pytest.mark.parametrize(
+        "name,prog", PAPER_PROGRAMS, ids=[n for n, _ in PAPER_PROGRAMS]
+    )
+    def test_differential_equivalence(self, name, prog):
+        assert_equivalent(prog)

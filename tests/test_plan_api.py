@@ -216,12 +216,15 @@ class TestPlanReuse:
 
 class TestCapabilityContract:
     def test_declared_contracts(self):
-        assert backend_accepted_options(get_backend("threaded")) == ()
+        # threaded accepts "deps" as a documented no-op: its conservative
+        # send/wait execution already enforces a superset of any inspector
+        # graph, so inspect/speculate plans stay compilable for it
+        assert backend_accepted_options(get_backend("threaded")) == ("deps",)
         assert set(backend_accepted_options(get_backend("wavefront"))) == {
-            "chunk_limit", "scc_policy", "model", "processors",
+            "chunk_limit", "scc_policy", "model", "processors", "deps",
         }
         assert set(backend_accepted_options(get_backend("xla"))) == {
-            "chunk_limit", "scc_policy", "model", "processors",
+            "chunk_limit", "scc_policy", "model", "processors", "deps",
         }
 
     def test_threaded_rejects_scheduling_knobs(self):

@@ -5,14 +5,14 @@ The differential suite runs ≥ 10 programs (the paper's Alg. 1/4/6 — Alg. 4
 is the loop Alg. 5 synchronizes — plus 2-D distance cases, guards, stencils
 and seeded-random programs) through sequential / threaded / wavefront
 execution under naive and optimized synchronization, asserting bit-equal
-stores via tests/oracle.py.
+stores via tests/oracle.py.  The corpus itself lives in tests/programs.py,
+shared with the cyclic and inspector suites.
 """
-
-import random
 
 import pytest
 
 from oracle import assert_equivalent, run_all_backends
+from programs import DIFFERENTIAL_PROGRAMS, distance_2d
 from repro.core import (
     ArrayRef,
     LoopProgram,
@@ -20,7 +20,6 @@ from repro.core import (
     WavefrontError,
     analyze,
     insert_synchronization,
-    paper_alg1,
     paper_alg4,
     paper_alg6,
     plan,
@@ -30,91 +29,6 @@ from repro.core import (
 )
 from repro.core.dependence import FLOW, Dependence, paper_alg4_dependences
 from repro.core.wavefront import schedule_levels
-
-
-def _random_program(seed: int, n_stmt: int = 4, n_iter: int = 6) -> LoopProgram:
-    rng = random.Random(seed)
-    arrays = ["a", "b", "c", "d"]
-    stmts = []
-    for k in range(n_stmt):
-        reads = tuple(
-            ArrayRef(rng.choice(arrays), -rng.randint(0, 3))
-            for _ in range(rng.randint(0, 3))
-        )
-        stmts.append(Statement(f"S{k+1}", ArrayRef(rng.choice(arrays), 0), reads))
-    return LoopProgram(statements=tuple(stmts), bounds=((1, 1 + n_iter),))
-
-
-def _guarded_program() -> LoopProgram:
-    return LoopProgram(
-        statements=(
-            Statement("S1", ArrayRef("p", 0), (ArrayRef("p", -1),)),
-            Statement(
-                "S2", ArrayRef("a", 0), (ArrayRef("a", -1),), guard=ArrayRef("p", -1)
-            ),
-        ),
-        bounds=((1, 7),),
-    )
-
-
-def _distance_2d() -> LoopProgram:
-    """2-D distance case: (1,1) dep covered by (1,0)+(0,1) self-deps."""
-
-    return LoopProgram(
-        statements=(
-            Statement(
-                "S1",
-                ArrayRef("a", (0, 0)),
-                (ArrayRef("a", (-1, 0)), ArrayRef("a", (0, -1))),
-            ),
-            Statement("S2", ArrayRef("c", (0, 0)), (ArrayRef("a", (-1, -1)),)),
-        ),
-        bounds=((0, 4), (0, 4)),
-    )
-
-
-DIFFERENTIAL_PROGRAMS = [
-    ("alg1", paper_alg1(8)),
-    ("alg4_the_alg5_loop", paper_alg4(8)),
-    ("alg6", paper_alg6(8)),
-    ("distance_2d", _distance_2d()),
-    ("guarded", _guarded_program()),
-    (
-        "doall_parallel",
-        LoopProgram(
-            statements=(
-                Statement("S1", ArrayRef("a", 0), (ArrayRef("b", 0),)),
-                Statement("S2", ArrayRef("c", 0), (ArrayRef("a", 0),)),
-            ),
-            bounds=((0, 9),),
-        ),
-    ),
-    (
-        "stencil_delta3",
-        LoopProgram(
-            statements=(
-                Statement(
-                    "S1", ArrayRef("a", 0), (ArrayRef("a", -1), ArrayRef("a", -3))
-                ),
-            ),
-            bounds=((1, 9),),
-        ),
-    ),
-    (
-        "nest_2d_cross",
-        LoopProgram(
-            statements=(
-                Statement("S1", ArrayRef("a", (0, 0)), (ArrayRef("b", (-1, 0)),)),
-                Statement("S2", ArrayRef("b", (0, 0)), (ArrayRef("a", (0, -1)),)),
-            ),
-            bounds=((0, 3), (0, 3)),
-        ),
-    ),
-    ("random_0", _random_program(0)),
-    ("random_1", _random_program(1)),
-    ("random_2", _random_program(2, n_stmt=3, n_iter=5)),
-    ("random_3", _random_program(3, n_stmt=2, n_iter=8)),
-]
 
 
 class TestDifferentialEquivalence:
@@ -248,7 +162,7 @@ class TestDiagnostics:
         distances are no longer rejected: the SCC-condensed hybrid
         schedules them (here as a cross-SCC edge between instance units)."""
 
-        prog = _distance_2d()
+        prog = distance_2d()
         sync = insert_synchronization(prog, analyze(prog))
         mixed = Dependence(FLOW, "S1", "S2", "a", (1, -1))
         wf = schedule_wavefronts(sync, list(analyze(prog)) + [mixed])
