@@ -547,8 +547,9 @@ def bench_inspector_sparse_matvec() -> None:
     instead (depth = max row multiplicity = 8).  Both sides execute warm in
     THIS process on the wavefront backend, so the recorded ratio
     (inspect / serialized) is runner-speed-free.  Bit-equality to the
-    sequential oracle is asserted before timing.  Not in KEY_BENCHES yet —
-    this row seeds BASELINE.json so the next PR can gate it.
+    sequential oracle is asserted before timing.  In KEY_BENCHES since PR 7
+    (its baseline row was seeded by PR 6): a broken inspector schedule
+    moves this ratio toward 1.0 from above or serializes it entirely.
     """
 
     from repro.core import (
@@ -745,6 +746,7 @@ KEY_BENCHES = (
     "cyclic_recurrence_1024",
     "scc_hybrid_pipeline",
     "skew_vs_chunk_wide",
+    "inspector_sparse_matvec",
 )
 # >30% slower than the committed baseline (after runner-speed
 # normalization) fails the build
@@ -867,8 +869,14 @@ def collect_reports() -> Dict[str, dict]:
     Written by ``--reports`` and uploaded as a CI artifact so
     strategy-selection drift (which policy won which SCC, and why) is
     diffable across PRs without re-running anything.
+
+    Every row also carries ``strategy_profile``: the cost model's predicted
+    cost for EVERY strategy offer next to the measured wall time of the
+    winning strategy (repro.obs.profile) — the predicted-vs-measured record
+    ROADMAP item 3c asked for, and the input to the inversion gate below.
     """
 
+    from repro.obs import profile as obs_profile
     from repro.core import paper_alg4, paper_alg6, plan
 
     programs = {
@@ -902,9 +910,84 @@ def collect_reports() -> Dict[str, dict]:
     }
     out: Dict[str, dict] = {}
     for name, (prog, backend, kwargs) in programs.items():
-        rep = plan(prog, method="isd").compile(backend, **kwargs).report()
-        out[name] = rep.summary()
+        exe = plan(prog, method="isd").compile(backend, **kwargs)
+        summary = exe.report().summary()
+        summary["strategy_profile"] = obs_profile.profile_executable(
+            exe, program=name
+        )
+        out[name] = summary
     return out
+
+
+# the auto/forced pairs of collect_reports() the inversion gate compares:
+# same program, same backend, one plan cost-model-chosen and one forced
+PROFILE_PAIRS = (
+    ("wide_serialized_8x128_auto", "wide_serialized_8x128_chunk"),
+    ("skew_recurrence_64x16_auto", "skew_recurrence_64x16_chunk"),
+)
+# the gate is deliberately LOOSE: it only speaks when the measurement is
+# decisive — the losing strategy must be beaten by >1.5x measured wall time
+# before a contrary prediction counts as an inversion (one-shot timings on
+# a shared runner jitter far more than the cost model's margins)
+INVERSION_MARGIN = 1.5
+
+
+def check_strategy_inversions(reports: Dict[str, dict]) -> int:
+    """Predicted-vs-measured sanity gate over the auto/forced pairs.
+
+    An *inversion* is the cost model predicting strategy A cheaper than B
+    while the measured wall times say B beats A by more than
+    ``INVERSION_MARGIN`` — the model getting a clearly-measured ordering
+    backwards.  Returns the number of inversions (0 = pass).
+    """
+
+    failures = 0
+    for auto_name, forced_name in PROFILE_PAIRS:
+        a_rows = (reports.get(auto_name) or {}).get("strategy_profile") or []
+        f_rows = (reports.get(forced_name) or {}).get("strategy_profile") or []
+        if not a_rows or not f_rows:
+            print(
+                f"INVERSION-GATE {auto_name} vs {forced_name}: profile rows "
+                "missing",
+                file=sys.stderr,
+            )
+            failures += 1
+            continue
+        a, f = a_rows[0], f_rows[0]
+        a_strat, f_strat = a["strategy"], f["strategy"]
+        predicted = a.get("predicted") or {}
+        if a_strat == f_strat:
+            print(
+                f"INVERSION-GATE {auto_name} vs {forced_name}: both resolved "
+                f"to {a_strat!r} — nothing to compare, OK",
+                file=sys.stderr,
+            )
+            continue
+        if a_strat not in predicted or f_strat not in predicted:
+            print(
+                f"INVERSION-GATE {auto_name} vs {forced_name}: scoreboard "
+                f"lacks {a_strat!r}/{f_strat!r} — skipped",
+                file=sys.stderr,
+            )
+            continue
+        a_us, f_us = float(a["measured_us"]), float(f["measured_us"])
+        verdict = "OK"
+        if a_us > INVERSION_MARGIN * f_us and predicted[a_strat] <= predicted[f_strat]:
+            # forced strategy measured clearly faster, model preferred auto
+            verdict = "INVERTED"
+        if f_us > INVERSION_MARGIN * a_us and predicted[f_strat] <= predicted[a_strat]:
+            verdict = "INVERTED"
+        print(
+            f"INVERSION-GATE {auto_name}({a_strat}) vs "
+            f"{forced_name}({f_strat}): predicted "
+            f"{predicted[a_strat]:.0f} vs {predicted[f_strat]:.0f}, "
+            f"measured {a_us:.0f}us vs {f_us:.0f}us "
+            f"(margin {INVERSION_MARGIN:.1f}x) {verdict}",
+            file=sys.stderr,
+        )
+        if verdict != "OK":
+            failures += 1
+    return failures
 
 
 def main(argv: List[str] | None = None) -> None:
@@ -942,6 +1025,14 @@ def main(argv: List[str] | None = None) -> None:
         help="write this run's record to --baseline (the escape hatch after "
         "an intentional perf change; commit the refreshed file)",
     )
+    ap.add_argument(
+        "--obs",
+        metavar="PATH",
+        default=None,
+        help="write the unified metrics snapshot plus a traced "
+        "plan->compile->run cycle (Chrome-trace events) to PATH — the "
+        "observability CI artifact riding next to SYNC_REPORTS",
+    )
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -956,6 +1047,7 @@ def main(argv: List[str] | None = None) -> None:
     if args.json:
         pathlib.Path(args.json).write_text(json.dumps(record, indent=2))
         print(f"wrote {len(record)} benches to {args.json}", file=sys.stderr)
+    reports = None
     if args.reports:
         reports = collect_reports()
         pathlib.Path(args.reports).write_text(json.dumps(reports, indent=2))
@@ -963,11 +1055,37 @@ def main(argv: List[str] | None = None) -> None:
             f"wrote {len(reports)} parallelization reports to {args.reports}",
             file=sys.stderr,
         )
+    if args.obs:
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        from repro.core import paper_alg6, plan
+
+        # the traced cycle runs AFTER the timed benches, so enabling the
+        # tracer here cannot perturb any gated number; the metrics snapshot
+        # covers the whole bench process (cache traffic, backend run
+        # counts, speculation counters)
+        obs_trace.clear()
+        with obs_trace.tracing():
+            plan(paper_alg6(64), method="isd").compile("wavefront").run()
+        payload = {
+            "metrics": obs_metrics.snapshot(),
+            "trace": obs_trace.to_chrome_trace(),
+        }
+        pathlib.Path(args.obs).write_text(json.dumps(payload, indent=2))
+        print(
+            f"wrote obs artifact (metrics snapshot + "
+            f"{len(payload['trace']['traceEvents'])} trace events) to "
+            f"{args.obs}",
+            file=sys.stderr,
+        )
     if args.update_baseline:
         pathlib.Path(args.baseline).write_text(json.dumps(record, indent=2))
         print(f"updated baseline {args.baseline}", file=sys.stderr)
     if args.check_baseline:
         failures = check_baseline(record, pathlib.Path(args.baseline))
+        if reports is None:
+            reports = collect_reports()
+        failures += check_strategy_inversions(reports)
         if failures:
             sys.exit(1)
 

@@ -167,7 +167,47 @@ def main() -> None:
 
     print()
     print("=" * 70)
-    print("4. The same optimizer on a pipeline-parallel stage graph")
+    print("4. Observability: span tracing + the unified metrics registry")
+    print("=" * 70)
+    # Tracing is off by default (the hot paths pay one hoisted branch);
+    # inside the context manager every pipeline phase records a span.
+    import json
+
+    from repro import obs
+    from repro.obs import metrics, trace
+
+    obs.reset_all()
+    with trace.tracing():
+        exe = plan(paper_alg6(16), PlanOptions(method="isd")).compile(
+            "wavefront"
+        )
+        exe.run()
+    doc = json.loads(exe.trace_json())  # Chrome-trace: chrome://tracing
+    phases = sorted({e["name"] for e in doc["traceEvents"]})
+    print(f"  traced {len(doc['traceEvents'])} spans: {', '.join(phases)}")
+    snap = metrics.snapshot()
+    print(
+        "  metrics: analysis misses={}, backend.runs.wavefront={}".format(
+            snap["analysis_cache.misses"], snap["backend.runs.wavefront"]
+        )
+    )
+    # predicted-vs-measured per strategy offer: the cost-model auction's
+    # full scoreboard rides every recurrence row; the profiler pairs the
+    # winner's predicted cost with a measured wall time (SYNC_REPORTS
+    # carries these rows per benchmark program).
+    from repro.obs import profile
+
+    rec2 = plan(rec, PlanOptions(method="isd")).compile("wavefront")
+    (row,) = profile.profile_executable(rec2, program="quickstart_rec")
+    print(
+        f"  profiler: strategy={row['strategy']} "
+        f"predicted={row['predicted']} measured_us={row['measured_us']:.0f}"
+    )
+    obs.reset_all()
+
+    print()
+    print("=" * 70)
+    print("5. The same optimizer on a pipeline-parallel stage graph")
     print("=" * 70)
     pp_plan = plan_pipeline_sync(
         StageGraph(num_stages=6, num_microbatches=4, skips=((0, 2), (0, 3), (0, 4)))

@@ -17,37 +17,69 @@ Hit/miss counters (structural and table level) are surfaced through
 from __future__ import annotations
 
 import collections
-import dataclasses
 import threading
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram
 from repro.core.policy import SccPolicyLike
 from repro.compile.structure import structural_key
 
+_FIELDS = ("hits", "misses", "table_hits", "table_misses")
 
-@dataclasses.dataclass
+
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    table_hits: int = 0
-    table_misses: int = 0
+    """Hit/miss counters for one :class:`CompileCache`.
+
+    With ``metrics_prefix`` set the four counters live in the unified
+    registry (:mod:`repro.obs.metrics`) — that is how the process-global
+    cache publishes ``compile_cache.hits`` etc. while keeping this object's
+    historical surface (``.hits``, ``.as_dict()``, ``.note()``).  Without a
+    prefix (test-local ``CompileCache()`` instances) the counters are
+    private unregistered instruments, so per-instance assertions never see
+    another cache's traffic.
+    """
+
+    __slots__ = ("_counters",)
+
+    def __init__(self, metrics_prefix: Optional[str] = None):
+        if metrics_prefix is None:
+            self._counters = {f: _metrics.Counter(f) for f in _FIELDS}
+        else:
+            self._counters = {
+                f: _metrics.counter(f"{metrics_prefix}.{f}") for f in _FIELDS
+            }
+
+    @property
+    def hits(self) -> int:
+        return self._counters["hits"].value
+
+    @property
+    def misses(self) -> int:
+        return self._counters["misses"].value
+
+    @property
+    def table_hits(self) -> int:
+        return self._counters["table_hits"].value
+
+    @property
+    def table_misses(self) -> int:
+        return self._counters["table_misses"].value
 
     def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+        return {f: self._counters[f].value for f in _FIELDS}
 
     def note(self, hit: bool) -> None:
-        if hit:
-            self.hits += 1
-        else:
-            self.misses += 1
+        self._counters["hits" if hit else "misses"].inc()
 
     def note_tables(self, hit: bool) -> None:
-        if hit:
-            self.table_hits += 1
-        else:
-            self.table_misses += 1
+        self._counters["table_hits" if hit else "table_misses"].inc()
+
+    def reset(self) -> None:
+        for c in self._counters.values():
+            c.reset()
 
 
 class CompileCache:
@@ -61,12 +93,12 @@ class CompileCache:
 
     MAX_ENTRIES = 128
 
-    def __init__(self) -> None:
+    def __init__(self, metrics_prefix: Optional[str] = None) -> None:
         self._entries: "collections.OrderedDict[str, CompiledProgram]" = (
             collections.OrderedDict()
         )
         self._lock = threading.Lock()
-        self.stats = CacheStats()
+        self.stats = CacheStats(metrics_prefix)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -75,9 +107,11 @@ class CompileCache:
         return tuple(self._entries)
 
     def clear(self) -> None:
+        # counters reset in place: the registry (and any holder of this
+        # stats object) keeps observing the same instruments
         with self._lock:
             self._entries.clear()
-            self.stats = CacheStats()
+            self.stats.reset()
 
     def note_tables(self, hit: bool) -> None:
         """Thread-safe table-level counter update (the second cache level
@@ -110,26 +144,29 @@ class CompileCache:
 
         from repro.compile.lowering import CompiledProgram
 
-        key = structural_key(
-            program, retained, model, processors, chunk_limit, scc_policy,
-            deps,
-        )
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:
-                self._entries.move_to_end(key)
-                self.stats.note(True)
-                return entry, True
-        built = CompiledProgram(
-            key,
-            program,
-            retained,
-            model=model,
-            processors=processors,
-            chunk_limit=chunk_limit,
-            scc_policy=scc_policy,
-            deps=deps,
-        )
+        with _trace.span("compile.structural_lookup"):
+            key = structural_key(
+                program, retained, model, processors, chunk_limit, scc_policy,
+                deps,
+            )
+            with self._lock:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    self._entries.move_to_end(key)
+        if entry is not None:
+            self.stats.note(True)
+            return entry, True
+        with _trace.span("compile.build", key=key[:16]):
+            built = CompiledProgram(
+                key,
+                program,
+                retained,
+                model=model,
+                processors=processors,
+                chunk_limit=chunk_limit,
+                scc_policy=scc_policy,
+                deps=deps,
+            )
         built.cache = self
         with self._lock:
             entry = self._entries.get(key)  # lost a build race: use theirs
@@ -141,7 +178,7 @@ class CompileCache:
             return entry, False
 
 
-GLOBAL_CACHE = CompileCache()
+GLOBAL_CACHE = CompileCache(metrics_prefix="compile_cache")
 
 
 def get_or_compile(

@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Mapping, Optional
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.core.ir import run_sequential
 from repro.core.policy import SccPolicyLike
 from repro.core.sync import SyncProgram
@@ -61,19 +63,28 @@ def execute_compiled(
         from repro.compile.cache import GLOBAL_CACHE
 
         inspection = inspect_dependences(prog, init)
-        if speculation_violations(
-            prog, inspection.edges, case.schedule.level_of()
-        ):
-            cache = compiled.cache if compiled.cache is not None else GLOBAL_CACHE
-            fallback, _ = cache.get_or_compile(
-                prog,
-                compiled.retained,
-                model=compiled.model,
-                processors=compiled.processors,
-                chunk_limit=compiled.chunk_limit,
-                scc_policy=compiled.scc_policy,
+        _metrics.counter("speculation.validations").inc()
+        with _trace.span("speculate.validate", backend="xla"):
+            violated = bool(
+                speculation_violations(
+                    prog, inspection.edges, case.schedule.level_of()
+                )
             )
-            return execute_compiled(fallback, sync, store=init)
+        if violated:
+            _metrics.counter("speculation.rollbacks").inc()
+            with _trace.span("speculate.rollback", backend="xla"):
+                cache = (
+                    compiled.cache if compiled.cache is not None else GLOBAL_CACHE
+                )
+                fallback, _ = cache.get_or_compile(
+                    prog,
+                    compiled.retained,
+                    model=compiled.model,
+                    processors=compiled.processors,
+                    chunk_limit=compiled.chunk_limit,
+                    scc_policy=compiled.scc_policy,
+                )
+                return execute_compiled(fallback, sync, store=init)
     return dense.to_dicts()
 
 

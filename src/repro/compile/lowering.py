@@ -63,6 +63,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _trace
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram, is_indirect
 from repro.core.policy import SccPolicyLike
@@ -466,7 +467,8 @@ class CompiledProgram:
             if case is not None:
                 self._cases.move_to_end(key)
                 return case, True
-        built = self._build_case(program, dense)
+        with _trace.span("compile.tables", bounds=str(program.bounds)):
+            built = self._build_case(program, dense)
         with self._lock:
             case = self._cases.get(key)  # lost a build race: reuse theirs
             if case is None:
@@ -930,46 +932,54 @@ class CompiledProgram:
         from jax.experimental import enable_x64
 
         with enable_x64():
-            if case._device_tables is None:
-                # conversion is idempotent, so a concurrent duplicate would
-                # cost only a wasted copy; the lock keeps assignment clean
-                with self._lock:
-                    if case._device_tables is None:
-                        case._device_tables = self._to_device(case)
-            store = {}
-            for a in case.arrays:
-                flat = np.zeros(case.padded_sizes[a], dtype=np.float64)
-                flat[: case.flat_sizes[a]] = dense.data[a].ravel()
-                store[a] = jnp.asarray(flat)
-            coverage = {}
-            for a in case.sparse:
-                cov = np.zeros(case.padded_sizes[a], dtype=bool)
-                cov[: case.flat_sizes[a]] = dense.mask[a].ravel()
-                coverage[a] = jnp.asarray(cov)
-            out_store, out_cov, bad = self._jit(
-                case.static,
-                case.n_levels,
-                case._device_tables,
-                store,
-                coverage,
-                jnp.zeros((2,), bool),
-                jnp.int64(0),
-            )
+            with _trace.span("xla.to_device"):
+                if case._device_tables is None:
+                    # conversion is idempotent, so a concurrent duplicate
+                    # would cost only a wasted copy; the lock keeps
+                    # assignment clean
+                    with self._lock:
+                        if case._device_tables is None:
+                            case._device_tables = self._to_device(case)
+                store = {}
+                for a in case.arrays:
+                    flat = np.zeros(case.padded_sizes[a], dtype=np.float64)
+                    flat[: case.flat_sizes[a]] = dense.data[a].ravel()
+                    store[a] = jnp.asarray(flat)
+                coverage = {}
+                for a in case.sparse:
+                    cov = np.zeros(case.padded_sizes[a], dtype=bool)
+                    cov[: case.flat_sizes[a]] = dense.mask[a].ravel()
+                    coverage[a] = jnp.asarray(cov)
+            # host-side band timing: one level loop per jit call, so the
+            # finest host-visible unit is the whole fused level sweep
+            with _trace.span("xla.execute", levels=case.n_levels):
+                out_store, out_cov, bad = self._jit(
+                    case.static,
+                    case.n_levels,
+                    case._device_tables,
+                    store,
+                    coverage,
+                    jnp.zeros((2,), bool),
+                    jnp.int64(0),
+                )
+                # block inside the span: the jit call returns futures, and
+                # an unblocked exit would time dispatch, not execution
+                bad = np.asarray(bad)
             # device→host conversion stays inside the x64 scope: jax helper
             # jits (e.g. unstack) would otherwise see f32 defaults
-            bad = np.asarray(bad)
-            out_np = {
-                a: np.asarray(out_store[a])[: case.flat_sizes[a]].reshape(
-                    case.shapes[a]
-                )
-                for a in case.arrays
-            }
-            cov_np = {
-                a: np.asarray(out_cov[a])[: case.flat_sizes[a]].reshape(
-                    case.shapes[a]
-                )
-                for a in case.sparse
-            }
+            with _trace.span("xla.to_host"):
+                out_np = {
+                    a: np.asarray(out_store[a])[: case.flat_sizes[a]].reshape(
+                        case.shapes[a]
+                    )
+                    for a in case.arrays
+                }
+                cov_np = {
+                    a: np.asarray(out_cov[a])[: case.flat_sizes[a]].reshape(
+                        case.shapes[a]
+                    )
+                    for a in case.sparse
+                }
         if bad[0]:
             raise KeyError(_OOB_MSG)
         if bad[1]:

@@ -40,6 +40,8 @@ import hashlib
 import threading
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.core.ir import (
     ArrayRef,
     IndirectRef,
@@ -163,8 +165,12 @@ _INSPECTOR_MEMO: "collections.OrderedDict[tuple, InspectionResult]" = (
     collections.OrderedDict()
 )
 _INSPECTOR_MEMO_MAX = 64
-_INSPECTOR_STATS = {"hits": 0, "misses": 0}
 _INSPECTOR_LOCK = threading.Lock()
+# registry-backed counters (repro.obs.metrics); inspector_cache_stats()
+# keeps the exact pre-registry return shape ("misses" doubles as the
+# re-inspection count the serving summary reports)
+_INSPECTOR_HITS = _metrics.counter("inspector_cache.hits")
+_INSPECTOR_MISSES = _metrics.counter("inspector_cache.misses")
 
 
 def index_content_digest(prog: LoopProgram, store: Mapping[str, dict]) -> str:
@@ -181,13 +187,19 @@ def index_content_digest(prog: LoopProgram, store: Mapping[str, dict]) -> str:
 
 def inspector_cache_stats() -> Dict[str, int]:
     with _INSPECTOR_LOCK:
-        return dict(_INSPECTOR_STATS, size=len(_INSPECTOR_MEMO))
+        size = len(_INSPECTOR_MEMO)
+    return {
+        "hits": _INSPECTOR_HITS.value,
+        "misses": _INSPECTOR_MISSES.value,
+        "size": size,
+    }
 
 
 def clear_inspector_cache() -> None:
     with _INSPECTOR_LOCK:
         _INSPECTOR_MEMO.clear()
-        _INSPECTOR_STATS.update(hits=0, misses=0)
+    _INSPECTOR_HITS.reset()
+    _INSPECTOR_MISSES.reset()
 
 
 def inspect_dependences(
@@ -217,12 +229,14 @@ def inspect_dependences(
         cached = _INSPECTOR_MEMO.get(key)
         if cached is not None:
             _INSPECTOR_MEMO.move_to_end(key)
-            _INSPECTOR_STATS["hits"] += 1
-            return cached
-        _INSPECTOR_STATS["misses"] += 1
-    result = InspectionResult(
-        program=prog, arrays=arrays, edges=_compute_edges(prog, mem)
-    )
+    if cached is not None:
+        _INSPECTOR_HITS.inc()
+        return cached
+    _INSPECTOR_MISSES.inc()
+    with _trace.span("inspect", statements=len(prog.statements)):
+        result = InspectionResult(
+            program=prog, arrays=arrays, edges=_compute_edges(prog, mem)
+        )
     with _INSPECTOR_LOCK:
         _INSPECTOR_MEMO[key] = result
         while len(_INSPECTOR_MEMO) > _INSPECTOR_MEMO_MAX:

@@ -66,6 +66,9 @@ from typing import (
     Union,
 )
 
+from repro.obs import metrics as _metrics
+from repro.obs import obs_summary
+from repro.obs import trace as _trace
 from repro.core.dependence import Dependence, analyze, loop_carried
 from repro.core.elimination import (
     EliminationResult,
@@ -428,19 +431,24 @@ _ANALYSIS_MEMO: "collections.OrderedDict[Tuple, EliminationResult]" = (
     collections.OrderedDict()
 )
 _ANALYSIS_MEMO_MAX = 256
-_ANALYSIS_STATS = {"hits": 0, "misses": 0}
 _ANALYSIS_LOCK = threading.Lock()
+# registry-backed (repro.obs.metrics): the unified registry owns the
+# counters; this module keeps direct references for lock-free-looking
+# increments and analysis_cache_stats() stays a thin view with the exact
+# pre-registry return shape
+_ANALYSIS_HITS = _metrics.counter("analysis_cache.hits")
+_ANALYSIS_MISSES = _metrics.counter("analysis_cache.misses")
 
 
 def analysis_cache_stats() -> Dict[str, int]:
-    with _ANALYSIS_LOCK:
-        return dict(_ANALYSIS_STATS)
+    return {"hits": _ANALYSIS_HITS.value, "misses": _ANALYSIS_MISSES.value}
 
 
 def clear_analysis_cache() -> None:
     with _ANALYSIS_LOCK:
         _ANALYSIS_MEMO.clear()
-        _ANALYSIS_STATS.update(hits=0, misses=0)
+    _ANALYSIS_HITS.reset()
+    _ANALYSIS_MISSES.reset()
 
 
 def _eliminate(
@@ -530,14 +538,15 @@ def _memoized_eliminate(
         hit = _ANALYSIS_MEMO.get(key)
         if hit is not None:
             _ANALYSIS_MEMO.move_to_end(key)
-            _ANALYSIS_STATS["hits"] += 1
-            return hit
+    if hit is not None:
+        _ANALYSIS_HITS.inc()
+        return hit
     elim = _eliminate(prog, dep_list, method, model, processors)
     with _ANALYSIS_LOCK:
         _ANALYSIS_MEMO[key] = elim
         while len(_ANALYSIS_MEMO) > _ANALYSIS_MEMO_MAX:
             _ANALYSIS_MEMO.popitem(last=False)
-        _ANALYSIS_STATS["misses"] += 1
+    _ANALYSIS_MISSES.inc()
     return elim
 
 
@@ -624,6 +633,10 @@ class ParallelizationReport:
         if self.compiled is not None:
             out["compile_key"] = self.compiled.key[:16]
             out["compile_cache"] = self.compiled.cache_stats()
+        # observability pointers (repro.obs): deliberately free of live
+        # counter values so equal plans summarize identically regardless of
+        # what else ran in between (shim/staged bit-identity)
+        out["obs"] = obs_summary(self.backend)
         return out
 
 
@@ -681,11 +694,12 @@ class SyncPlan:
         _validate_scheduling_options(options)
         artifacts: Dict[str, object] = {}
         if spec.prepare:
-            artifacts = dict(
-                spec.prepare(
-                    self.optimized_sync, self.elimination.retained, **options
+            with _trace.span("compile", backend=backend):
+                artifacts = dict(
+                    spec.prepare(
+                        self.optimized_sync, self.elimination.retained, **options
+                    )
                 )
-            )
         return Executable(
             plan=self,
             backend=backend,
@@ -732,21 +746,30 @@ class Executable:
         stalls: Optional[Mapping] = None,
     ) -> dict:
         spec = get_backend(self.backend)
-        if spec.run is not None:
-            return spec.run(
-                self.plan.optimized_sync,
-                dict(self.artifacts),
-                store=store,
-                stalls=stalls,
-            )
-        if spec.differential is not None:
-            return spec.differential(
-                self.plan.optimized_sync, store=store, stalls=stalls
-            )
+        _metrics.counter(f"backend.runs.{self.backend}").inc()
+        with _trace.span("run", backend=self.backend):
+            if spec.run is not None:
+                return spec.run(
+                    self.plan.optimized_sync,
+                    dict(self.artifacts),
+                    store=store,
+                    stalls=stalls,
+                )
+            if spec.differential is not None:
+                return spec.differential(
+                    self.plan.optimized_sync, store=store, stalls=stalls
+                )
         raise ValueError(
             f"backend {self.backend!r} registers neither a run nor a "
             "differential hook — it cannot execute programs"
         )
+
+    def trace_json(self, indent: Optional[int] = None) -> str:
+        """The buffered span events as Chrome-trace JSON (see
+        :mod:`repro.obs.trace`; empty unless tracing was enabled around the
+        plan/compile/run calls)."""
+
+        return _trace.trace_json(indent=indent)
 
     # convenience views over the prepared artifacts ---------------------- #
     @property
@@ -809,35 +832,43 @@ def plan(
             f"(got options={options!r} plus {sorted(overrides)})"
         )
 
-    dep_list = (
-        list(options.deps)
-        if options.deps is not None and not isinstance(options.deps, str)
-        else analyze(prog)
-    )
-    fiss = fission(prog, dep_list)
-    naive = insert_synchronization(prog, dep_list, merge=False)
+    with _trace.span("plan", method=options.method, statements=len(prog.statements)):
+        with _trace.span("plan.deps"):
+            dep_list = (
+                list(options.deps)
+                if options.deps is not None and not isinstance(options.deps, str)
+                else analyze(prog)
+            )
+        with _trace.span("plan.fission"):
+            fiss = fission(prog, dep_list)
+        with _trace.span("plan.naive_sync"):
+            naive = insert_synchronization(prog, dep_list, merge=False)
 
-    elim = _memoized_eliminate(
-        prog,
-        dep_list,
-        options.method,
-        options.model,
-        options.processor_map,
-    )
+        with _trace.span("plan.elimination"):
+            elim = _memoized_eliminate(
+                prog,
+                dep_list,
+                options.method,
+                options.model,
+                options.processor_map,
+            )
 
-    # Genuinely unschedulable retained sets (lexicographically negative /
-    # backward-zero distances — a cyclic Δ-sign mix no machine can honor)
-    # fail HERE, at plan time, for every backend: the threaded machine
-    # would deadlock mid-execution and the schedulers would reject later
-    # with less context.  repro.core.scc raises with the offending SCC's
-    # statements and a witness cycle.
-    validate_retained(prog, elim.retained)
+        # Genuinely unschedulable retained sets (lexicographically negative /
+        # backward-zero distances — a cyclic Δ-sign mix no machine can honor)
+        # fail HERE, at plan time, for every backend: the threaded machine
+        # would deadlock mid-execution and the schedulers would reject later
+        # with less context.  repro.core.scc raises with the offending SCC's
+        # statements and a witness cycle (and bumps the
+        # plan.wavefront_rejections counter).
+        with _trace.span("plan.validate"):
+            validate_retained(prog, elim.retained)
 
-    optimized = strip_dependences(naive, elim.eliminated)
-    if options.merge_sends:
-        optimized = insert_synchronization(
-            prog, list(elim.retained), merge=True
-        )
+        with _trace.span("plan.optimize"):
+            optimized = strip_dependences(naive, elim.eliminated)
+            if options.merge_sends:
+                optimized = insert_synchronization(
+                    prog, list(elim.retained), merge=True
+                )
     return SyncPlan(
         program=prog,
         options=options,
@@ -942,15 +973,20 @@ def _wavefront_run(sync, artifacts, *, store=None, stalls=None):
         out = run_wavefront(
             sync, schedule=speculative, store=init, compare=False
         )
-        if not speculation_violations(
-            prog, inspection.edges, speculative.level_of()
-        ):
+        _metrics.counter("speculation.validations").inc()
+        with _trace.span("speculate.validate", backend="wavefront"):
+            ok = not speculation_violations(
+                prog, inspection.edges, speculative.level_of()
+            )
+        if ok:
             return out.store
         # rollback: the speculative result is discarded; re-execute the
         # conservative hybrid schedule from the untouched initial image
-        return run_wavefront(
-            sync, schedule=artifacts["wavefront"], store=init, compare=False
-        ).store
+        _metrics.counter("speculation.rollbacks").inc()
+        with _trace.span("speculate.rollback", backend="wavefront"):
+            return run_wavefront(
+                sync, schedule=artifacts["wavefront"], store=init, compare=False
+            ).store
     # mode == "inspect": exact per-store schedule — conservative proxies
     # replaced by the inspector's instance edges
     exact = schedule_levels(

@@ -286,6 +286,12 @@ class StrategyPlan:
     # level loop) conditions its ``level_cost`` hook on
     max_width: Optional[int] = None
     reason: str = ""
+    # the full auction scoreboard the winner was picked from, as
+    # (strategy, predicted cost) pairs — populated by CostModelPolicy so
+    # the predicted-vs-measured profiler (repro.obs.profile) can line every
+    # loser's prediction up against the winner's measured wall time; empty
+    # for forced strategies (no auction happened)
+    offers: Tuple[Tuple[str, float], ...] = ()
 
 
 class SchedulingPolicy:
@@ -570,6 +576,7 @@ class CostModelPolicy(SchedulingPolicy):
             cost=best_cost,
             reason=f"{tag} picked {best.strategy} "
             f"({scoreboard}); {best.reason}",
+            offers=tuple((p.strategy, c) for c, p in scored),
         )
 
 

@@ -59,6 +59,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.obs import metrics as _metrics
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram
 from repro.core.policy import (
@@ -278,6 +279,7 @@ def validate_retained(
             )
         problems.append(msg)
     if problems:
+        _metrics.counter("plan.wavefront_rejections").inc()
         raise WavefrontError(
             "no parallel schedule can enforce the retained synchronized "
             "dependences (the send/wait machine would deadlock on them): "
@@ -313,6 +315,9 @@ class SccInfo:
     skew: Optional[Matrix] = None  # unimodular matrix (strategy "skew")
     cost: Optional[float] = None   # cost-model estimate for the choice
     reason: str = ""               # why this strategy won (human-readable)
+    # the policy's full predicted scoreboard, (strategy, cost) per offer —
+    # empty for forced strategies; feeds the predicted-vs-measured profiler
+    offers: Tuple[Tuple[str, float], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -343,6 +348,7 @@ class SccPartition:
                     "skew": [list(r) for r in s.skew] if s.skew else None,
                     "cost": s.cost,
                     "reason": s.reason,
+                    "offers": {name: cost for name, cost in s.offers},
                 }
                 for s in self.recurrences
             ],
@@ -458,6 +464,7 @@ def analyze_sccs(
                 skew=plan.skew,
                 cost=plan.cost,
                 reason=plan.reason,
+                offers=plan.offers,
             )
         )
     return SccPartition(

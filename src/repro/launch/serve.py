@@ -137,28 +137,43 @@ def _rescore_plan(tokens: int):
     return plan(sparse_matvec(max(2, tokens)), PlanOptions(deps="speculate"))
 
 
+def _timed(hist_name: str, fn, *args):
+    """Run ``fn`` and record its latency (ms) in the named obs histogram."""
+
+    from repro.obs import metrics
+
+    t0 = time.perf_counter()
+    out = fn(*args)
+    metrics.histogram(hist_name).observe((time.perf_counter() - t0) * 1e3)
+    return out
+
+
 def plan_wave_sync(max_new: int):
     """One wave's decode-chain report: plan memo + structural compile cache."""
 
-    return _decode_plan(max_new).compile("xla").report()
+    p = _timed("serve.plan_ms", _decode_plan, max_new)
+    return _timed("serve.compile_ms", p.compile, "xla").report()
 
 
 def plan_scan_sync(slots: int, horizon: int):
     """One wave's rescoring-scan report (hybrid artifact, see _scan_plan)."""
 
-    return _scan_plan(slots, horizon).compile("xla").report()
+    p = _timed("serve.plan_ms", _scan_plan, slots, horizon)
+    return _timed("serve.compile_ms", p.compile, "xla").report()
 
 
 def plan_route_sync(tokens: int):
     """One wave's routing-histogram Executable (non-affine, deps="inspect")."""
 
-    return _route_plan(tokens).compile("xla")
+    p = _timed("serve.plan_ms", _route_plan, tokens)
+    return _timed("serve.compile_ms", p.compile, "xla")
 
 
 def plan_rescore_sync(tokens: int):
     """One wave's sparse-rescore Executable (non-affine, deps="speculate")."""
 
-    return _rescore_plan(tokens).compile("xla")
+    p = _timed("serve.plan_ms", _rescore_plan, tokens)
+    return _timed("serve.compile_ms", p.compile, "xla")
 
 
 def run_nonaffine_wave(route_exe, rescore_exe, sampled: List[int], bins: int):
@@ -224,6 +239,8 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
 
+    from repro.obs import metrics
+    from repro.core import inspector_cache_stats
     from repro.configs import ARCHITECTURES, get_smoke_config
     from repro.launch.steps import make_prefill_step, make_serve_step
     from repro.models import model_zoo as zoo
@@ -281,6 +298,7 @@ def main() -> None:
                 args.max_new, B, pool=planner
             )
             waves += 1
+            t_run = time.perf_counter()
             while len(active) < B:  # pad the batch with a dummy copy
                 active.append(
                     Request(rid=-1, prompt=active[0].prompt, done=True)
@@ -314,6 +332,9 @@ def main() -> None:
             run_nonaffine_wave(
                 route_exe, rescore_exe, cur[:, 0].tolist(), bins=B
             )
+            metrics.histogram("serve.run_ms").observe(
+                (time.perf_counter() - t_run) * 1e3
+            )
             done.extend(r for r in active if r.rid >= 0)
 
     dt = time.perf_counter() - t0
@@ -321,6 +342,29 @@ def main() -> None:
         f"served {len(done)} requests, {decoded_tokens} decode tokens in "
         f"{dt:.2f}s ({decoded_tokens/max(dt,1e-9):.0f} tok/s batched, "
         f"kv_quant={cfg.kv_quant})"
+    )
+    # per-wave latency distributions (repro.obs histograms) instead of a
+    # lone end-to-end total: plan/compile are per planner call (4 per
+    # wave), run is the wave's decode + non-affine execution
+    def _pct(name: str) -> str:
+        h = metrics.histogram(name)
+        p50, p99 = h.percentile(50), h.percentile(99)
+        if p50 is None:
+            return f"{name.split('.')[-1]}: n=0"
+        return (
+            f"{name.split('.')[-1]}: n={h.count} "
+            f"p50={p50:.2f}ms p99={p99:.2f}ms"
+        )
+
+    rollbacks = metrics.counter("speculation.rollbacks").value
+    reinspections = inspector_cache_stats()["misses"]
+    print(
+        f"per-wave latency ({waves} waves): {_pct('serve.plan_ms')} | "
+        f"{_pct('serve.compile_ms')} | {_pct('serve.run_ms')}"
+    )
+    print(
+        f"speculation rollbacks: {rollbacks}, inspector re-inspections "
+        f"(memo misses): {reinspections}"
     )
     if sync_plan is not None and sync_plan.compiled is not None:
         cc = sync_plan.compiled.cache_stats()
@@ -338,8 +382,6 @@ def main() -> None:
             f"statements={rec['statements']})"
         )
     if route_exe is not None and rescore_exe is not None:
-        from repro.core import inspector_cache_stats
-
         print(
             f"non-affine wave workloads: routing histogram "
             f"(deps='inspect', key {route_exe.compiled.key[:12]}) + sparse "

@@ -1,0 +1,75 @@
+"""repro.obs — observability for the staged pipeline.
+
+Three pieces, all stdlib-only (this package sits at the very bottom of the
+dependency stack, below even :mod:`repro.core.policy` — it must import from
+nowhere inside ``repro``):
+
+* :mod:`repro.obs.trace` — span tracing.  ``with obs.trace.span("plan"):``
+  records Chrome-trace complete events when tracing is enabled (off by
+  default; the disabled path is one branch/no-op context manager per span
+  site).  Export with ``obs.trace.trace_json()`` or, at the pipeline level,
+  ``Executable.trace_json()``.
+* :mod:`repro.obs.metrics` — one thread-safe registry of counters, gauges
+  and p50/p99 histograms.  The analysis/inspector/compile cache stat dicts
+  are registry-backed views now; speculation rollbacks, WavefrontError
+  rejections, per-backend run counts and serve per-wave latencies live here
+  too.  ``obs.metrics.snapshot()`` is the JSON artifact.
+* :mod:`repro.obs.profile` — predicted-vs-measured strategy rows (every
+  ``StrategyPlan`` offer's predicted cost next to the winning strategy's
+  measured wall time), emitted into ``SYNC_REPORTS`` by
+  ``benchmarks/run.py``.
+
+``reset_all()`` is the single test/bench reset: metrics, trace buffer,
+profiler records, and the three pipeline caches, in one call.
+"""
+
+from __future__ import annotations
+
+from . import metrics, profile, trace
+
+__all__ = ["metrics", "profile", "trace", "reset_all", "obs_summary"]
+
+
+def obs_summary(backend: str = "") -> dict:
+    """The deterministic observability stub attached to every
+    ``ParallelizationReport.summary()["obs"]``.
+
+    Deliberately carries NO live counter values: two reports for the same
+    plan must summarize identically no matter how many pipeline runs
+    happened between them (the shim-vs-staged bit-identity contract), so
+    this records only where the volatile data lives, plus the report-stable
+    tracing flag state at summary time.
+    """
+
+    return {
+        "tracing": trace.tracing_enabled(),
+        "trace_export": "Executable.trace_json() / obs.trace.trace_json()",
+        "metrics_export": "obs.metrics.snapshot()",
+        "backend": backend,
+    }
+
+
+def reset_all() -> None:
+    """Zero every observability surface and clear the pipeline caches.
+
+    Replaces the three-surface reset dance tests used to do by hand
+    (``clear_analysis_cache()`` + ``clear_inspector_cache()`` +
+    ``clear_compile_cache()``).  Imports lazily so ``repro.obs`` itself
+    stays import-light and cycle-free.
+    """
+
+    metrics.reset()
+    trace.clear()
+    profile.clear()
+    from repro.core.inspector import clear_inspector_cache
+    from repro.core.parallelizer import clear_analysis_cache
+
+    clear_analysis_cache()
+    clear_inspector_cache()
+    import sys
+
+    # the compile cache lives behind the lazily-registered xla backend;
+    # only clear it when something already paid that import
+    cache_mod = sys.modules.get("repro.compile.cache")
+    if cache_mod is not None:
+        cache_mod.clear_compile_cache()

@@ -452,6 +452,16 @@ class TestBackCompatShim:
                 "model": "doall",
                 "policy": "auto",
             },
+            # observability pointers (PR 7): deterministic — export
+            # locations and the tracing flag only, never live counters
+            "obs": {
+                "tracing": False,
+                "trace_export": (
+                    "Executable.trace_json() / obs.trace.trace_json()"
+                ),
+                "metrics_export": "obs.metrics.snapshot()",
+                "backend": "threaded",
+            },
         }
         assert rep.summary() == golden_summary
 
