@@ -30,6 +30,36 @@ it re-runs the whole analysis per call, where a plan is computed once and
 compiled for any number of backends — each applying its own capability
 contract and cost model (step 3b below shows wavefront and xla choosing
 different schedules for one plan).
+
+Serving many structures concurrently is the job of the **plan service**
+(:mod:`repro.serve`, step 4b below)::
+
+    svc = PlanService(ServiceOptions(workers=4, plan_cache_capacity=8))
+    fut = svc.submit(prog, PlanOptions(method="isd"), tenant="decode",
+                     run=True)
+    res = fut.result()        # ServiceResult: plan, executable, store
+    svc.drain(); svc.close()  # or: with PlanService(...) as svc
+
+``ServiceOptions`` rejects unknown knobs at construction with a ValueError
+naming the accepted set, like ``PlanOptions`` and the backend capability
+contracts.  Migration from the helpers that used to live inside the
+``repro.launch.serve`` demo client (unbounded ``functools.lru_cache``
+memos, now bounded per-tenant LRUs on the process-default service):
+
+    ==========================================  ==========================================================
+    before (repro.launch.serve internals)       after (repro.serve, the public surface)
+    ==========================================  ==========================================================
+    launch.serve.plan_wave_sync(m) (lru_cache)  repro.serve.plan_wave_sync(m)   — tenant "decode"
+    launch.serve.plan_scan_sync(s, h)           repro.serve.plan_scan_sync(s, h) — tenant "scan"
+    launch.serve.plan_route_sync(t)             repro.serve.plan_route_sync(t)  — tenant "route"
+    launch.serve.plan_rescore_sync(t)           repro.serve.plan_rescore_sync(t) — tenant "rescore"
+    launch.serve.plan_wave(m, s, pool)          repro.serve.plan_wave(m, s, pool)
+    <helper>.cache_clear()                      obs.reset_all()  (resets the default service too)
+    ad-hoc plan()+compile() per request         PlanService.submit(prog, options, tenant=..., run=True)
+    ==========================================  ==========================================================
+
+(The ``launch.serve`` names still import — they are re-exports of the
+``repro.serve`` surface now.)
 """
 
 from repro.core import (
@@ -203,6 +233,41 @@ def main() -> None:
         f"  profiler: strategy={row['strategy']} "
         f"predicted={row['predicted']} measured_us={row['measured_us']:.0f}"
     )
+    obs.reset_all()
+
+    print()
+    print("=" * 70)
+    print("4b. Serving: the multi-tenant plan service (repro.serve)")
+    print("=" * 70)
+    # A service admits requests for many program structures concurrently
+    # and resolves each through the full cache hierarchy: per-tenant plan
+    # LRU -> structural compile cache -> trace bucket -> per-bounds tables.
+    # Two bounds in the same power-of-two bucket share one jit trace, so
+    # four (structure, bounds) pairs below cost two traces, and a warm mix
+    # re-traces nothing (the serve_sustained_traffic bench gates this).
+    from repro.serve import (
+        PlanService,
+        ServiceOptions,
+        decode_program,
+        scan_program,
+    )
+
+    with PlanService(ServiceOptions(workers=2, plan_cache_capacity=4)) as svc:
+        for max_new in (12, 13):
+            svc.submit(decode_program(max_new), tenant="decode", run=True)
+        for horizon in (4, 5):
+            svc.submit(scan_program(3, horizon), tenant="scan", run=True)
+        stats = svc.drain()
+    print(f"  tenants: {stats['tenants']}")
+    print(
+        f"  4 (structure, bounds) pairs -> jit traces={stats['traces']} "
+        f"(bucket hits={stats['bucket_hits']}, "
+        f"misses={stats['bucket_misses']})"
+    )
+    try:
+        ServiceOptions(worker=4)  # typo: the accepted set is named
+    except ValueError as e:
+        print(f"  ServiceOptions(worker=4) -> ValueError: {e}")
     obs.reset_all()
 
     print()

@@ -20,10 +20,20 @@ level loop into a single XLA computation instead:
     gather/compute/scatter and advances the cursor.  Per level, only the
     statements that actually have work pay for it.
 
-Because the tables are *data* and the group/lane axes are padded to
-power-of-two buckets, one traced artifact serves any iteration count whose
-bucketed shapes coincide; jax's own jit cache handles per-shape
-specialization below the structural cache (:mod:`repro.compile.cache`).
+Because the tables are *data*, the group/lane axes are padded to
+power-of-two buckets, and every per-bounds scalar (level count, segment
+extents, cursor bases, chunk counts) is a *traced argument*, one traced
+artifact serves any iteration count whose bucketed shapes coincide.  That is
+the third level of the cache hierarchy — structure → **bucket** → trace →
+per-bounds tables: the structural cache (:mod:`repro.compile.cache`) maps a
+dependence structure to one :class:`CompiledProgram`; inside it, jax's jit
+cache keys each trace on the bounds-free statics plus bucketed shapes (the
+"bucket", mirrored host-side in ``PreparedCase.bucket`` and counted through
+the ``xla.traces`` / ``xla.bucket_*`` metrics); under each trace, the
+per-(bounds, layout, content) table LRU supplies the values.  A serving loop
+over a fixed structure-and-bucket mix therefore re-traces exactly zero times
+at steady state, which ``benchmarks/run.py``'s ``serve_sustained_traffic``
+row gates on.
 
 Hybrid (SCC-condensed) schedules add one more structure: a cyclic SCC's
 chunked DOACROSS block appears as a *recurrence band* — a run of consecutive
@@ -39,8 +49,11 @@ into the level tables (the schedule emits original iteration points), and
 each dswp lane is simply its statement's own (group × lane) table.  Levels
 outside any band keep the generic cursor machinery, so pipelined schedules
 that interleave a recurrence with downstream acyclic levels still compile.
-Schedules without recurrence SCCs take the exact pre-hybrid trace (a single
-level loop over a traced level count, shared across bounds).
+Only the segment *skeleton* (kinds + band statement sets) is static; segment
+extents, cursor bases and chunk counts travel in per-segment ``int32``
+vectors (``PreparedCase.seg_dyn``), so hybrid artifacts bucket-share traces
+exactly like acyclic ones.  Schedules without recurrence SCCs take a single
+level loop over a traced level count.
 
 Everything runs in ``float64`` (via :func:`jax.experimental.enable_x64`), so
 stores are bit-equal to :func:`repro.core.ir.run_sequential` — the same
@@ -63,6 +76,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 from repro.core.dependence import Dependence
 from repro.core.ir import LoopProgram, is_indirect
@@ -252,12 +266,17 @@ class _StmtStatic:
 @dataclasses.dataclass(frozen=True)
 class _CaseStatic:
     stmts: Tuple[_StmtStatic, ...]
-    # segmented level loop (hybrid schedules with recurrence SCCs only):
-    #   ("wave", lo, hi, cursors0)      — generic dispatcher over [lo, hi)
-    #   ("rec",  n, ((k, row0), ...))   — nested fori_loop over n chunks;
-    #                                     statement k runs row0 + t at step t
-    # None → the single traced-bound level loop (pre-hybrid trace, shared
-    # across bounds with equal bucketed shapes)
+    # segmented level loop (hybrid schedules with recurrence SCCs only) as a
+    # bounds-free *skeleton*:
+    #   ("wave",)            — generic dispatcher segment
+    #   ("rec", (k1, ...))   — nested fori_loop band running statements k1…
+    # Every per-bounds scalar (segment extents, cursor bases, chunk counts,
+    # band row bases) rides in ``PreparedCase.seg_dyn`` as a *traced* jit
+    # argument instead, so two bounds whose skeleton and bucketed shapes
+    # coincide share one trace — the "bucket" level of the cache hierarchy
+    # (structure → bucket → trace → per-bounds tables).
+    # None → the single traced-bound level loop (likewise shared across
+    # bounds with equal bucketed shapes)
     segments: Optional[Tuple[Tuple, ...]] = None
 
 
@@ -275,7 +294,12 @@ class PreparedCase:
     padded_sizes: Dict[str, int]                # flat buffer length (≥ live+1)
     sparse: Tuple[str, ...]                     # arrays carrying coverage
     schedule: WavefrontSchedule
+    # per-segment dynamic scalars (see _CaseStatic.segments):
+    #   wave → [lo, hi, cursors0…] ; rec → [n_chunks, row0…]
+    seg_dyn: Tuple[np.ndarray, ...] = ()
+    bucket: Tuple = ()                          # trace-identity key (host view)
     _device_tables: Optional[Tuple] = None      # jnp copies, converted once
+    _device_segdyn: Optional[Tuple] = None
 
 
 _OOB_MSG = (
@@ -336,12 +360,32 @@ class CompiledProgram:
         self._batched = [
             self._make_batched(s) for s in program.statements
         ]
+        # trace accounting (the "bucket" cache level): _buckets collects the
+        # distinct trace identities served so far; _trace_count is bumped by
+        # the Python body of _exec, which jax runs exactly once per trace —
+        # at steady state the two agree, and the service/bench judge
+        # re-trace rate on the registry counter behind them
+        self._buckets: set = set()
+        self._trace_count = 0
         self._jit = jax.jit(self._exec, static_argnums=(0,))
 
     # ------------------------------------------------------------------ #
     @property
     def prepared_cases(self) -> int:
         return len(self._cases)
+
+    @property
+    def trace_count(self) -> int:
+        """Times jax traced the executable (Python body executions)."""
+
+        return self._trace_count
+
+    @property
+    def bucket_count(self) -> int:
+        """Distinct (skeleton, bucketed shapes) trace identities served."""
+
+        with self._lock:
+            return len(self._buckets)
 
     def cache_stats(self) -> Dict[str, int]:
         if self.cache is None:  # pragma: no cover - standalone use
@@ -667,16 +711,41 @@ class CompiledProgram:
                 table["oob"] = oob
             tables.append(table)
 
-        segments = None
+        segments, seg_dyn = None, ()
         if sched.scc is not None and sched.scc.recurrences:
-            segments = self._segment_levels(
+            segments, seg_dyn = self._segment_levels(
                 program, sched, n_levels, len(program.statements)
             )
 
-        return PreparedCase(
-            static=_CaseStatic(
-                stmts=tuple(stmt_statics), segments=segments
+        static = _CaseStatic(stmts=tuple(stmt_statics), segments=segments)
+        # The trace identity, computed host-side: everything jax's jit cache
+        # keys a trace on — the statics plus the bucketed argument shapes
+        # (level tables, padded store/coverage buffers, segment scalars).
+        # Per-bounds *values* (n_levels, table contents, seg_dyn contents)
+        # are traced arguments and deliberately absent.
+        bucket = (
+            static,
+            tuple(
+                tuple(
+                    sorted(
+                        (
+                            role,
+                            tuple(a.shape for a in arr)
+                            if isinstance(arr, tuple)
+                            else arr.shape,
+                        )
+                        for role, arr in t.items()
+                    )
+                )
+                for t in tables
             ),
+            tuple(sorted(padded_sizes.items())),
+            sparse,
+            tuple(d.shape for d in seg_dyn),
+        )
+
+        return PreparedCase(
+            static=static,
             n_levels=n_levels,
             tables=tuple(tables),
             arrays=arrays,
@@ -686,6 +755,8 @@ class CompiledProgram:
             padded_sizes=padded_sizes,
             sparse=sparse,
             schedule=sched,
+            seg_dyn=seg_dyn,
+            bucket=bucket,
         )
 
     # Minimum run of uniform levels worth collapsing into a nested loop —
@@ -695,7 +766,7 @@ class CompiledProgram:
     @staticmethod
     def _segment_levels(
         program: LoopProgram, sched, n_levels: int, n_stmts: int
-    ) -> Tuple[Tuple, ...]:
+    ) -> Tuple[Tuple[Tuple, ...], Tuple[np.ndarray, ...]]:
         """Partition the level sequence into wave segments + recurrence bands.
 
         A band is a maximal run of ≥ :attr:`REC_BAND_MIN` levels whose
@@ -705,6 +776,13 @@ class CompiledProgram:
         same-level groups of different scheduling units are independent by
         construction, and the band executes them in lexical order like the
         generic dispatcher.
+
+        Returns ``(skeleton, seg_dyn)``: the bounds-free segment skeleton
+        that goes into :class:`_CaseStatic` plus one ``int32`` scalar vector
+        per segment (``[lo, hi, cursors0…]`` for waves, ``[n_chunks,
+        row0…]`` for bands) that rides as a traced jit argument — the
+        static/dynamic split that lets every bounds in a bucket share one
+        trace.
         """
 
         import bisect
@@ -730,7 +808,15 @@ class CompiledProgram:
                 for k in range(n_stmts)
             )
 
-        segments: List[Tuple] = []
+        skeleton: List[Tuple] = []
+        seg_dyn: List[np.ndarray] = []
+
+        def wave(lo: int, hi: int) -> None:
+            skeleton.append(("wave",))
+            seg_dyn.append(
+                np.asarray([lo, hi, *cursors_at(lo)], dtype=np.int32)
+            )
+
         wave_start = 0
         L = 0
         while L < n_levels:
@@ -745,28 +831,35 @@ class CompiledProgram:
                 run += 1
             if base and run >= CompiledProgram.REC_BAND_MIN:
                 if wave_start < L:
-                    segments.append(
-                        ("wave", wave_start, L, cursors_at(wave_start))
+                    wave(wave_start, L)
+                skeleton.append(("rec", tuple(k for k, _ in base)))
+                seg_dyn.append(
+                    np.asarray(
+                        [run, *(r0 for _, r0 in base)], dtype=np.int32
                     )
-                segments.append(("rec", run, tuple(base)))
+                )
                 wave_start = L + run
             L += run
         if wave_start < n_levels:
-            segments.append(
-                ("wave", wave_start, n_levels, cursors_at(wave_start))
-            )
-        return tuple(segments)
+            wave(wave_start, n_levels)
+        return tuple(skeleton), tuple(seg_dyn)
 
     # ------------------------------------------------------------------ #
     # The traced executable
     # ------------------------------------------------------------------ #
 
     def _exec(
-        self, static: _CaseStatic, n_levels, tables, store, coverage, bad,
-        opaque_zero,
+        self, static: _CaseStatic, n_levels, seg_dyn, tables, store,
+        coverage, bad, opaque_zero,
     ):
         import jax.numpy as jnp
         from jax import lax
+
+        # this Python body runs exactly once per jax trace — the counter IS
+        # the re-trace metric the serving layer and the sustained-traffic
+        # bench gate on (a warm bucket never re-enters here)
+        self._trace_count += 1
+        _metrics.counter("xla.traces").inc()
 
         K = len(static.stmts)
 
@@ -866,32 +959,28 @@ class CompiledProgram:
 
         # Segmented form (hybrid schedules with recurrence SCCs): wave
         # segments keep the generic dispatcher; each recurrence band is its
-        # own nested fori_loop with the store as the recurrence carry and
-        # statically known (statement, row) progressions — no cursors, no
-        # conds, only the band's statements in the body.
-        for seg in static.segments:
+        # own nested fori_loop with the store as the recurrence carry — no
+        # cursors, no conds, only the band's statements in the body.  All
+        # per-bounds scalars (extents, cursor bases, chunk counts, row
+        # bases) arrive in the traced ``seg_dyn`` vectors, so the trace is
+        # bounds-free: any iteration count in the bucket replays it.
+        for seg, dyn in zip(static.segments, seg_dyn):
             if seg[0] == "wave":
-                _tag, lo, hi, cursors0 = seg
                 store, coverage, _, bad = lax.fori_loop(
-                    lo,
-                    hi,
+                    dyn[0],
+                    dyn[1],
                     level_body,
-                    (
-                        store,
-                        coverage,
-                        jnp.asarray(cursors0, jnp.int32),
-                        bad,
-                    ),
+                    (store, coverage, dyn[2:].astype(jnp.int32), bad),
                 )
             else:
-                _tag, n_chunks, pairs = seg
+                _tag, stmt_ks = seg
 
-                def rec_body(t, carry, pairs=pairs):
+                def rec_body(t, carry, stmt_ks=stmt_ks, dyn=dyn):
                     store, coverage, bad = carry
-                    for k, row0 in pairs:  # lexical statement order
+                    for j, k in enumerate(stmt_ks):  # lexical stmt order
                         ss = static.stmts[k]
                         new_write, new_cov, bad = group_step(
-                            k, ss, row0 + t, store, coverage, bad
+                            k, ss, dyn[1 + j] + t, store, coverage, bad
                         )
                         store = dict(store)
                         store[ss.write] = new_write
@@ -901,7 +990,7 @@ class CompiledProgram:
                     return (store, coverage, bad)
 
                 store, coverage, bad = lax.fori_loop(
-                    0, n_chunks, rec_body, (store, coverage, bad)
+                    0, dyn[0], rec_body, (store, coverage, bad)
                 )
         return store, coverage, bad
 
@@ -931,6 +1020,16 @@ class CompiledProgram:
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
+        # bucket accounting before dispatch: a fresh trace identity is the
+        # only thing that may legitimately re-enter the tracer
+        with self._lock:
+            new_bucket = case.bucket not in self._buckets
+            if new_bucket:
+                self._buckets.add(case.bucket)
+        _metrics.counter(
+            "xla.bucket_misses" if new_bucket else "xla.bucket_hits"
+        ).inc()
+
         with enable_x64():
             with _trace.span("xla.to_device"):
                 if case._device_tables is None:
@@ -939,6 +1038,9 @@ class CompiledProgram:
                     # assignment clean
                     with self._lock:
                         if case._device_tables is None:
+                            case._device_segdyn = tuple(
+                                jnp.asarray(d) for d in case.seg_dyn
+                            )
                             case._device_tables = self._to_device(case)
                 store = {}
                 for a in case.arrays:
@@ -956,6 +1058,7 @@ class CompiledProgram:
                 out_store, out_cov, bad = self._jit(
                     case.static,
                     case.n_levels,
+                    case._device_segdyn,
                     case._device_tables,
                     store,
                     coverage,

@@ -181,7 +181,12 @@ def index_content_digest(prog: LoopProgram, store: Mapping[str, dict]) -> str:
     for arr in prog.index_arrays():
         h.update(arr.encode())
         for cell, val in sorted(store[arr].items()):
-            h.update(repr((cell, val)).encode())
+            # normalize the value type: a wave passing {"bin": [0, 1]} and
+            # the lowering's float-normalized index view must digest
+            # identically, or the same instance graph is re-inspected once
+            # per representation (the subscript evaluator int()s the value
+            # either way, so float() loses nothing the graph depends on)
+            h.update(repr((tuple(cell), float(val))).encode())
     return h.hexdigest()
 
 

@@ -10,25 +10,29 @@ iteration, so the decode batch stays full — the serving pattern the
 decode_32k/long_500k dry-run cells size.  Uses the int8 KV cache when
 ``--kv-quant`` is set.
 
-Each batch wave resolves its synchronization through the staged pipeline —
-``plan()`` once per program *structure* (memoized below), then a fresh
-``SyncPlan.compile("xla")`` per wave — two compiles, resolved *concurrently*
-(two planner threads per wave, the way a real server overlaps scheduling
-work), both riding the structural compile cache (:mod:`repro.compile`):
+This module is a thin demo *client* of the plan service: the wave workloads
+and their caching live in :mod:`repro.serve` (per-tenant bounded plan LRUs
+on the process-default :class:`~repro.serve.PlanService`, replacing the
+unbounded ``functools.lru_cache`` memos that used to sit here).  Each batch
+wave resolves its synchronization through the staged pipeline — ``plan()``
+once per program *structure* (tenant plan LRU), then a fresh
+``SyncPlan.compile("xla")`` per wave — resolved *concurrently* (planner
+threads per wave, the way a real server overlaps scheduling work), all
+riding the structural compile cache (:mod:`repro.compile`):
 
   * the acyclic decode chain (DECODE extends the KV cache with Δ=1, SAMPLE
-    reads it at Δ=0), and
+    reads it at Δ=0),
   * a recurrence-bearing cross-slot rescoring scan whose mixed-sign carried
     dependence makes the plan a *hybrid* artifact — the scheduling-policy
     engine (:mod:`repro.core.policy`) picks a strategy per SCC through the
-    xla backend's ``level_cost`` capability hook (the NumPy interpreter
-    would skew this scan; the compiled level loop's near-flat narrow-step
-    cost can resolve it differently), so the serving path exercises hybrid
-    artifacts under concurrent re-planning, not just DOALL waves.
+    xla backend's ``level_cost`` capability hook, and
+  * the two non-affine wave workloads (inspector-routed histogram,
+    speculative sparse rescore).
 
 The dependence structures are identical from wave to wave, so every wave
-after the first is a plan-memo hit AND a structural-cache hit for both
-compiles — the serving loop never re-analyzes or re-lowers.  The hit/miss
+after the first is a plan-LRU hit AND a structural-cache hit for every
+compile — the serving loop never re-analyzes or re-lowers; with the
+shape-bucketed traced artifacts it never re-*traces* either.  The hit/miss
 counters are printed with the throughput summary.
 """
 
@@ -37,9 +41,20 @@ from __future__ import annotations
 import argparse
 import concurrent.futures
 import dataclasses
-import functools
 import time
-from typing import List, Optional
+from typing import List
+
+# the wave workloads' public home is repro.serve; re-exported here so the
+# demo client's historical surface (serve.plan_wave etc.) keeps working
+from repro.serve import (  # noqa: F401  (re-exported helper surface)
+    default_service,
+    plan_rescore_sync,
+    plan_route_sync,
+    plan_scan_sync,
+    plan_wave,
+    plan_wave_sync,
+    run_nonaffine_wave,
+)
 
 
 @dataclasses.dataclass
@@ -48,191 +63,6 @@ class Request:
     prompt: "object"
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-
-
-@functools.lru_cache(maxsize=16)
-def _decode_plan(max_new: int):
-    """The decode chain's backend-independent SyncPlan, analyzed once.
-
-    The per-slot decode chain is the paper's loop in miniature: DECODE
-    extends the KV cache from the previous step's cache (flow, Δ=1), SAMPLE
-    reads the fresh cache (flow, Δ=0).  The structure is independent of
-    which requests occupy the slots, so the plan (and below it, the
-    compiled artifact — bounds are not part of the structural key) is
-    shared by every wave at this ``max_new``.
-    """
-
-    from repro.core import ArrayRef, LoopProgram, Statement, plan
-
-    prog = LoopProgram(
-        statements=(
-            Statement("DECODE", ArrayRef("kv", 0), (ArrayRef("kv", -1),)),
-            Statement("SAMPLE", ArrayRef("tok", 0), (ArrayRef("kv", 0),)),
-        ),
-        bounds=((1, max(2, max_new)),),
-    )
-    return plan(prog, method="isd")
-
-
-@functools.lru_cache(maxsize=16)
-def _scan_plan(slots: int, horizon: int):
-    """The cross-slot rescoring scan's SyncPlan — a *cyclic* wave shape.
-
-    RESCORE folds each slot's running score with the previous step's score
-    of the same slot (reads ``score[s, t-1]``: flow, Δ=(0,1)) and borrows
-    the neighboring slot's one-step-newer score (reads ``score[s-1, t+1]``:
-    flow, Δ=(1,-1)) — a mixed-sign recurrence SCC, the request shape the
-    acyclic decode plan never produces.  EMIT reads the settled score
-    (DOALL, pipelined against the scan).  The (0,1) carried dependence pins
-    DOACROSS chunks to 1, and the per-backend cost model decides between
-    the unimodular skew and unit chunks at compile time — either way a
-    *hybrid* artifact served from the structural cache wave after wave.
-    """
-
-    from repro.core import ArrayRef, LoopProgram, Statement, plan
-
-    prog = LoopProgram(
-        statements=(
-            Statement(
-                "RESCORE",
-                ArrayRef("score", (0, 0)),
-                (ArrayRef("score", (0, -1)), ArrayRef("score", (-1, 1))),
-            ),
-            Statement(
-                "EMIT", ArrayRef("beam", (0, 0)), (ArrayRef("score", (0, 0)),)
-            ),
-        ),
-        bounds=((0, max(2, slots)), (0, max(2, horizon))),
-    )
-    return plan(prog, method="isd")
-
-
-@functools.lru_cache(maxsize=16)
-def _route_plan(tokens: int):
-    """Expert-routing histogram — the serving loop's *non-affine* shape.
-
-    Each decoded token scatters into its expert's bin: ``h[bin[i]] += w[i]``
-    with ``bin`` only known at runtime (it is this wave's sampled tokens).
-    Planned under ``deps="inspect"``: the static analyzer can only emit the
-    serializing proxy chain, the inspector resolves the actual conflicts per
-    wave.  One structural artifact serves every wave (the deps mode is part
-    of the structural key); each distinct routing pattern adds one
-    content-keyed per-bounds table entry beside it.
-    """
-
-    from repro.core import PlanOptions, histogram, plan
-
-    return plan(histogram(max(2, tokens)), PlanOptions(deps="inspect"))
-
-
-@functools.lru_cache(maxsize=16)
-def _rescore_plan(tokens: int):
-    """Sparse-matvec rescore ``y[row[k]] += v[k]*x[col[k]]`` under
-    ``deps="speculate"``: waves whose rows happen to be conflict-free keep
-    the optimistic doall result; a conflicting wave validates against the
-    inspector graph, rolls back, and re-runs conservatively."""
-
-    from repro.core import PlanOptions, plan, sparse_matvec
-
-    return plan(sparse_matvec(max(2, tokens)), PlanOptions(deps="speculate"))
-
-
-def _timed(hist_name: str, fn, *args):
-    """Run ``fn`` and record its latency (ms) in the named obs histogram."""
-
-    from repro.obs import metrics
-
-    t0 = time.perf_counter()
-    out = fn(*args)
-    metrics.histogram(hist_name).observe((time.perf_counter() - t0) * 1e3)
-    return out
-
-
-def plan_wave_sync(max_new: int):
-    """One wave's decode-chain report: plan memo + structural compile cache."""
-
-    p = _timed("serve.plan_ms", _decode_plan, max_new)
-    return _timed("serve.compile_ms", p.compile, "xla").report()
-
-
-def plan_scan_sync(slots: int, horizon: int):
-    """One wave's rescoring-scan report (hybrid artifact, see _scan_plan)."""
-
-    p = _timed("serve.plan_ms", _scan_plan, slots, horizon)
-    return _timed("serve.compile_ms", p.compile, "xla").report()
-
-
-def plan_route_sync(tokens: int):
-    """One wave's routing-histogram Executable (non-affine, deps="inspect")."""
-
-    p = _timed("serve.plan_ms", _route_plan, tokens)
-    return _timed("serve.compile_ms", p.compile, "xla")
-
-
-def plan_rescore_sync(tokens: int):
-    """One wave's sparse-rescore Executable (non-affine, deps="speculate")."""
-
-    p = _timed("serve.plan_ms", _rescore_plan, tokens)
-    return _timed("serve.compile_ms", p.compile, "xla")
-
-
-def run_nonaffine_wave(route_exe, rescore_exe, sampled: List[int], bins: int):
-    """Execute the wave's non-affine workloads with this wave's runtime
-    index contents; returns (route store, rescore store) after asserting
-    both bit-equal the sequential oracle."""
-
-    from repro.core import indexed_store, run_sequential
-
-    route_prog = route_exe.plan.program
-    (lo, hi), = route_prog.bounds
-    n = hi - lo
-    pattern = [sampled[k % len(sampled)] % bins for k in range(n)]
-    store = indexed_store(route_prog, {"bin": pattern})
-    init = {a: dict(c) for a, c in store.items()}
-    routed = route_exe.run(store=init)
-    assert routed == run_sequential(route_prog, init)
-
-    rescore_prog = rescore_exe.plan.program
-    (lo, hi), = rescore_prog.bounds
-    n = hi - lo
-    rows = [sampled[k % len(sampled)] % max(2, n // 2) for k in range(n)]
-    store = indexed_store(
-        rescore_prog, {"row": rows, "col": list(range(n))}
-    )
-    init = {a: dict(c) for a, c in store.items()}
-    rescored = rescore_exe.run(store=init)
-    assert rescored == run_sequential(rescore_prog, init)
-    return routed, rescored
-
-
-def plan_wave(
-    max_new: int,
-    slots: int,
-    pool: Optional[concurrent.futures.ThreadPoolExecutor] = None,
-):
-    """Resolve both wave plans concurrently (decode chain + rescoring scan).
-
-    Two planner threads race through ``SyncPlan.compile("xla")`` into the
-    structural compile cache — the concurrency the cache's locking
-    discipline is built for, now exercised by a cyclic workload on every
-    serving wave.  Pass a long-lived ``pool`` from the serving loop: warm
-    waves plan in sub-millisecond cache hits, which per-wave executor setup
-    would dwarf.
-    """
-
-    if pool is None:
-        with concurrent.futures.ThreadPoolExecutor(max_workers=2) as own:
-            return plan_wave(max_new, slots, pool=own)
-    f_decode = pool.submit(plan_wave_sync, max_new)
-    f_scan = pool.submit(plan_scan_sync, slots, max_new)
-    f_route = pool.submit(plan_route_sync, 2 * slots)
-    f_rescore = pool.submit(plan_rescore_sync, 2 * slots)
-    return (
-        f_decode.result(),
-        f_scan.result(),
-        f_route.result(),
-        f_rescore.result(),
-    )
 
 
 def main() -> None:

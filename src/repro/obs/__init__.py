@@ -73,3 +73,9 @@ def reset_all() -> None:
     cache_mod = sys.modules.get("repro.compile.cache")
     if cache_mod is not None:
         cache_mod.clear_compile_cache()
+    # likewise the plan service's per-tenant LRUs (repro.serve): discard the
+    # process-default service so plan_cache.* counters and cache contents
+    # reset together
+    serve_mod = sys.modules.get("repro.serve.service")
+    if serve_mod is not None:
+        serve_mod.reset_default_service()

@@ -1,0 +1,387 @@
+"""``PlanService`` — a continuous-batching plan service over the staged
+pipeline.
+
+The serving-layer form of the paper's amortization promise: analyze a loop
+structure once, then serve any number of waves from caches.  A service
+instance admits requests for many program *structures* concurrently and
+resolves each through the full cache hierarchy —
+
+  per-tenant plan LRU  →  structural compile cache  →  trace bucket
+  →  per-bounds tables
+
+— so a warm request touches no analysis, no scheduling, and (for bounds in
+an already-traced bucket, see :mod:`repro.compile.lowering`) no jax tracing.
+
+Concurrency discipline:
+
+* a fixed worker pool (``ServiceOptions.workers``) runs submitted requests;
+* *per-structure admission*: requests for the same program structure are
+  serialized through a per-fingerprint lock, so a cold structure is planned
+  and lowered exactly once no matter how many submitters race it — the
+  structural cache's miss count stays equal to the number of distinct
+  structures;
+* *bounded admission*: more than ``max_queue_depth`` outstanding requests
+  rejects at ``submit()`` instead of queueing without limit.
+
+Observability (all in the unified ``repro.obs.metrics`` registry, so
+``obs.reset_all()`` covers them): ``plan_cache.hits`` / ``plan_cache.misses``
+/ ``plan_cache.evictions`` counters and the ``plan_cache.size`` gauge for
+the per-tenant LRUs, the ``serve.queue_depth`` gauge, and per-tenant
+``serve.latency_ms.<tenant>`` histograms beside the global
+``serve.plan_ms`` / ``serve.compile_ms`` ones.
+"""
+
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import dataclasses
+import threading
+import time
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.obs import metrics as _metrics
+from repro.core.ir import LoopProgram
+from repro.core.parallelizer import (
+    Executable,
+    PlanOptions,
+    SyncPlan,
+    plan as _plan,
+)
+from repro.serve.options import ServiceOptions
+
+__all__ = [
+    "PlanService",
+    "ServiceResult",
+    "default_service",
+    "reset_default_service",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceResult:
+    """What one admitted request resolved to."""
+
+    tenant: str
+    plan: SyncPlan
+    executable: Executable
+    store: Optional[dict]        # output store when the request ran
+    plan_cached: bool            # per-tenant plan-LRU hit?
+    latency_ms: float
+
+
+class _TenantCache:
+    """One tenant's bounded plan LRU (counters are plain ints here; the
+    registry-backed totals are maintained by the owning service)."""
+
+    __slots__ = ("entries", "hits", "misses", "evictions")
+
+    def __init__(self) -> None:
+        self.entries: "collections.OrderedDict[Tuple, SyncPlan]" = (
+            collections.OrderedDict()
+        )
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+
+def _options_key(options: PlanOptions) -> object:
+    """A hashable stand-in for the plan options (scc_policy instances may
+    not be hashable; their repr is stable enough for a cache key)."""
+
+    try:
+        hash(options)
+        return options
+    except TypeError:
+        return repr(options)
+
+
+class PlanService:
+    """Multi-tenant plan service: ``submit()`` / ``drain()`` / ``stats()`` /
+    ``close()`` over per-tenant bounded plan LRUs and a worker pool."""
+
+    def __init__(self, options: Optional[ServiceOptions] = None) -> None:
+        self.options = options if options is not None else ServiceOptions()
+        self._lock = threading.Lock()
+        self._tenants: Dict[str, _TenantCache] = {}
+        self._structure_locks: Dict[str, threading.Lock] = {}
+        self._outstanding: set = set()
+        self._submitted = 0
+        self._completed = 0
+        self._closed = False
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.options.workers,
+            thread_name_prefix="plan-serve",
+        )
+
+    # ------------------------------------------------------------------ #
+    # Cache plumbing
+    # ------------------------------------------------------------------ #
+
+    def _tenant(self, name: str) -> _TenantCache:
+        cache = self._tenants.get(name)
+        if cache is None:
+            cache = self._tenants.setdefault(name, _TenantCache())
+        return cache
+
+    def _structure_lock(self, fingerprint: str) -> threading.Lock:
+        with self._lock:
+            lock = self._structure_locks.get(fingerprint)
+            if lock is None:
+                lock = self._structure_locks[fingerprint] = threading.Lock()
+            return lock
+
+    def _cache_size(self) -> int:
+        return sum(len(t.entries) for t in self._tenants.values())
+
+    def resolve(
+        self,
+        program: LoopProgram,
+        options: Optional[PlanOptions] = None,
+        *,
+        tenant: Optional[str] = None,
+    ) -> Tuple[SyncPlan, bool]:
+        """The synchronous core: per-tenant plan LRU with per-structure
+        admission.  Returns ``(plan, cached)``; records ``serve.plan_ms``
+        (every call, hits included — the latency a serving wave observes)
+        and the per-tenant ``plan_cache.*`` counters."""
+
+        tenant = tenant if tenant is not None else self.options.default_tenant
+        options = options if options is not None else PlanOptions()
+        t0 = time.perf_counter()
+        from repro.compile.structure import program_fingerprint
+
+        fp = program_fingerprint(program)
+        key = (fp, program.bounds, _options_key(options))
+        with self._lock:
+            cache = self._tenant(tenant)
+            cached = cache.entries.get(key)
+            if cached is not None:
+                cache.entries.move_to_end(key)
+                cache.hits += 1
+        if cached is not None:
+            _metrics.counter("plan_cache.hits").inc()
+            _metrics.histogram("serve.plan_ms").observe(
+                (time.perf_counter() - t0) * 1e3
+            )
+            return cached, True
+        # per-structure admission: one planner per structure at a time, so
+        # racing submitters of a cold structure queue here instead of
+        # planning (and structurally compiling) the same thing twice
+        with self._structure_lock(fp):
+            with self._lock:
+                cached = cache.entries.get(key)
+                if cached is not None:
+                    cache.entries.move_to_end(key)
+                    cache.hits += 1
+            if cached is not None:
+                _metrics.counter("plan_cache.hits").inc()
+                _metrics.histogram("serve.plan_ms").observe(
+                    (time.perf_counter() - t0) * 1e3
+                )
+                return cached, True
+            built = _plan(program, options)
+            with self._lock:
+                cache.misses += 1
+                cache.entries[key] = built
+                while len(cache.entries) > self.options.plan_cache_capacity:
+                    cache.entries.popitem(last=False)
+                    cache.evictions += 1
+                    _metrics.counter("plan_cache.evictions").inc()
+                _metrics.gauge("plan_cache.size").set(self._cache_size())
+        _metrics.counter("plan_cache.misses").inc()
+        _metrics.histogram("serve.plan_ms").observe(
+            (time.perf_counter() - t0) * 1e3
+        )
+        return built, False
+
+    # ------------------------------------------------------------------ #
+    # The public request surface
+    # ------------------------------------------------------------------ #
+
+    def submit(
+        self,
+        program: LoopProgram,
+        options: Optional[PlanOptions] = None,
+        *,
+        tenant: Optional[str] = None,
+        store: Optional[Mapping[str, dict]] = None,
+        run: bool = False,
+    ) -> "concurrent.futures.Future[ServiceResult]":
+        """Admit one request: plan (through the tenant's LRU), compile for
+        the service backend, optionally execute.
+
+        Returns a future of :class:`ServiceResult`.  ``store``/``run=True``
+        execute the compiled artifact (``store`` is copied, not mutated).
+        Raises ``RuntimeError`` when the service is closed or the admission
+        bound (``max_queue_depth``) is reached.
+        """
+
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "PlanService is closed — create a new service to submit"
+                )
+            if len(self._outstanding) >= self.options.max_queue_depth:
+                raise RuntimeError(
+                    f"admission rejected: {len(self._outstanding)} requests "
+                    f"outstanding >= max_queue_depth="
+                    f"{self.options.max_queue_depth}"
+                )
+            self._submitted += 1
+        future = self._pool.submit(
+            self._handle, program, options, tenant, store, run
+        )
+        with self._lock:
+            self._outstanding.add(future)
+            _metrics.gauge("serve.queue_depth").set(len(self._outstanding))
+        future.add_done_callback(self._settle)
+        return future
+
+    def _settle(self, future) -> None:
+        with self._lock:
+            self._outstanding.discard(future)
+            self._completed += 1
+            _metrics.gauge("serve.queue_depth").set(len(self._outstanding))
+
+    def _handle(
+        self,
+        program: LoopProgram,
+        options: Optional[PlanOptions],
+        tenant: Optional[str],
+        store: Optional[Mapping[str, dict]],
+        run: bool,
+    ) -> ServiceResult:
+        tenant = tenant if tenant is not None else self.options.default_tenant
+        t0 = time.perf_counter()
+        plan_obj, cached = self.resolve(program, options, tenant=tenant)
+        tc = time.perf_counter()
+        # compile under the same per-structure admission lock as planning:
+        # get_or_compile counts a lost race as a second structural miss, so
+        # without this two workers handling the same cold structure would
+        # both lower it and the miss count would exceed #distinct structures
+        from repro.compile.structure import program_fingerprint
+
+        with self._structure_lock(program_fingerprint(program)):
+            executable = plan_obj.compile(self.options.backend)
+        _metrics.histogram("serve.compile_ms").observe(
+            (time.perf_counter() - tc) * 1e3
+        )
+        out = None
+        if run or store is not None:
+            init = {
+                a: dict(c)
+                for a, c in (store or program.initial_store()).items()
+            }
+            out = executable.run(store=init)
+        latency = (time.perf_counter() - t0) * 1e3
+        _metrics.histogram(f"serve.latency_ms.{tenant}").observe(latency)
+        return ServiceResult(
+            tenant=tenant,
+            plan=plan_obj,
+            executable=executable,
+            store=out,
+            plan_cached=cached,
+            latency_ms=latency,
+        )
+
+    def drain(self, timeout: Optional[float] = None) -> dict:
+        """Block until every outstanding request settles; returns
+        :meth:`stats`.  Raises ``TimeoutError`` if ``timeout`` (seconds)
+        elapses first."""
+
+        with self._lock:
+            pending = tuple(self._outstanding)
+        done, not_done = concurrent.futures.wait(pending, timeout=timeout)
+        if not_done:
+            raise TimeoutError(
+                f"drain timed out with {len(not_done)} requests outstanding"
+            )
+        return self.stats()
+
+    def stats(self) -> dict:
+        """A JSON-able snapshot: per-tenant cache traffic, queue state, and
+        the trace/bucket counters behind the re-trace rate (this is the
+        ``SERVE_sync`` artifact the bench job uploads)."""
+
+        snap = _metrics.snapshot()
+        with self._lock:
+            tenants = {
+                name: {
+                    "size": len(t.entries),
+                    "hits": t.hits,
+                    "misses": t.misses,
+                    "evictions": t.evictions,
+                }
+                for name, t in sorted(self._tenants.items())
+            }
+            out = {
+                "backend": self.options.backend,
+                "workers": self.options.workers,
+                "tenants": tenants,
+                "plan_cache": {
+                    "size": self._cache_size(),
+                    "capacity_per_tenant": self.options.plan_cache_capacity,
+                    "hits": sum(t.hits for t in self._tenants.values()),
+                    "misses": sum(t.misses for t in self._tenants.values()),
+                    "evictions": sum(
+                        t.evictions for t in self._tenants.values()
+                    ),
+                },
+                "queue_depth": len(self._outstanding),
+                "submitted": self._submitted,
+                "completed": self._completed,
+            }
+        out["traces"] = snap.get("xla.traces", 0)
+        out["bucket_hits"] = snap.get("xla.bucket_hits", 0)
+        out["bucket_misses"] = snap.get("xla.bucket_misses", 0)
+        out["latency_ms"] = {
+            name.split("serve.latency_ms.", 1)[1]: snap[name]
+            for name in snap
+            if name.startswith("serve.latency_ms.")
+        }
+        return out
+
+    def close(self) -> None:
+        """Drain the pool and reject further submits (idempotent)."""
+
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "PlanService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------- #
+# The process-default service (what the launch/serve demo client rides)
+# ---------------------------------------------------------------------- #
+
+_DEFAULT: Optional[PlanService] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_service() -> PlanService:
+    """The lazily created process-global service instance."""
+
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = PlanService()
+        return _DEFAULT
+
+
+def reset_default_service() -> None:
+    """Close and discard the default service (``obs.reset_all()`` hook —
+    the next ``default_service()`` call starts cold)."""
+
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        svc, _DEFAULT = _DEFAULT, None
+    if svc is not None:
+        svc.close()

@@ -1,0 +1,337 @@
+"""The multi-tenant plan service (:mod:`repro.serve`).
+
+Four contracts under test:
+
+* **Options discipline** — ``ServiceOptions`` is frozen, hashable and
+  eagerly validated: an unknown knob or a bad value fails at construction
+  with a ValueError naming the accepted set (the same shape as the backend
+  capability contracts).
+* **Soak** — three program structures × two bucketed bounds each, twenty
+  waves: after the warmup wave the ``xla.traces`` counter must not move
+  (shape-bucketed traced artifacts — steady-state re-trace rate 0), a
+  deliberately chatty tenant under a tight LRU cap must show evictions
+  *without* disturbing the other tenants' plans, and mid-soak samples must
+  stay bit-equal to the sequential oracle.
+* **Concurrency** — six submitter threads racing mixed structures through
+  one service keep the structural compile cache's miss count equal to the
+  number of distinct structures (per-structure admission: a lost
+  ``get_or_compile`` race would count a second miss).
+* **Inspector memo on the serve path** (PR 6 follow-up) — waves that change
+  only non-index data reuse the instance graph: the memo hit counter grows
+  and the miss counter stays flat, including when a wave hands the same
+  index pattern over as floats instead of ints (the content digest
+  normalizes value types).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+import repro.obs as obs
+from repro.obs import metrics
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    Statement,
+    inspect_dependences,
+    inspector_cache_stats,
+    indexed_store,
+    run_sequential,
+)
+from repro.serve import (
+    PlanService,
+    ServiceOptions,
+    decode_program,
+    plan_rescore_sync,
+    scan_program,
+)
+
+
+def _doall_program(n: int) -> LoopProgram:
+    """A dependence-free two-statement chain — the third soak structure."""
+
+    return LoopProgram(
+        statements=(
+            Statement("A", ArrayRef("a", 0), (ArrayRef("b", 0),)),
+            Statement("B", ArrayRef("c", 0), (ArrayRef("a", 0),)),
+        ),
+        bounds=((0, n),),
+    )
+
+
+def _fresh_initial(prog: LoopProgram) -> dict:
+    return {a: dict(c) for a, c in prog.initial_store().items()}
+
+
+# ---------------------------------------------------------------------- #
+# ServiceOptions
+# ---------------------------------------------------------------------- #
+
+def test_service_options_rejects_unknown_knob_naming_accepted_set():
+    with pytest.raises(ValueError) as exc:
+        ServiceOptions(worker=4)  # typo for "workers"
+    msg = str(exc.value)
+    assert "'worker'" in msg
+    # the accepted set is spelled out so the caller can fix the knob
+    for name in (
+        "backend",
+        "workers",
+        "plan_cache_capacity",
+        "max_queue_depth",
+        "default_tenant",
+    ):
+        assert name in msg
+
+
+def test_service_options_validates_values():
+    with pytest.raises(ValueError) as exc:
+        ServiceOptions(backend="no-such-backend")
+    assert "no-such-backend" in str(exc.value)
+    for bad in ({"workers": 0}, {"plan_cache_capacity": 0},
+                {"max_queue_depth": -1}, {"workers": True}):
+        with pytest.raises(ValueError):
+            ServiceOptions(**bad)
+    with pytest.raises(ValueError):
+        ServiceOptions(default_tenant="")
+
+
+def test_service_options_frozen_and_hashable():
+    opts = ServiceOptions(workers=3)
+    assert opts.workers == 3
+    assert opts.backend == "xla"  # defaults survive the custom __init__
+    with pytest.raises(Exception):
+        opts.workers = 5  # type: ignore[misc]
+    assert hash(opts) == hash(ServiceOptions(workers=3))
+    assert opts != ServiceOptions(workers=4)
+
+
+# ---------------------------------------------------------------------- #
+# Basic request surface
+# ---------------------------------------------------------------------- #
+
+def test_submit_runs_and_matches_oracle():
+    obs.reset_all()
+    with PlanService(ServiceOptions(workers=2)) as svc:
+        prog = decode_program(8)
+        res = svc.submit(prog, tenant="t0", run=True).result()
+        assert res.tenant == "t0"
+        assert res.plan_cached is False
+        assert res.store == run_sequential(prog, _fresh_initial(prog))
+        # same structure+bounds again: plan-LRU hit
+        res2 = svc.submit(prog, tenant="t0", run=True).result()
+        assert res2.plan_cached is True
+        assert res2.store == res.store
+        stats = svc.drain()
+        assert stats["tenants"]["t0"] == {
+            "size": 1, "hits": 1, "misses": 1, "evictions": 0,
+        }
+        assert stats["submitted"] == stats["completed"] == 2
+
+
+def test_admission_bound_and_close_reject():
+    obs.reset_all()
+    svc = PlanService(ServiceOptions(workers=1, max_queue_depth=1))
+    prog = _doall_program(8)
+    from repro.compile.structure import program_fingerprint
+
+    # hold the structure's admission lock so the first request parks in
+    # resolve() — the admission bound is then observable deterministically
+    gate = svc._structure_lock(program_fingerprint(prog))
+    gate.acquire()
+    try:
+        first = svc.submit(prog, tenant="t")
+        with pytest.raises(RuntimeError) as exc:
+            svc.submit(prog, tenant="t")
+        assert "max_queue_depth" in str(exc.value)
+    finally:
+        gate.release()
+    assert first.result().plan is not None
+    svc.close()
+    with pytest.raises(RuntimeError) as exc:
+        svc.submit(prog, tenant="t")
+    assert "closed" in str(exc.value)
+    svc.close()  # idempotent
+
+
+# ---------------------------------------------------------------------- #
+# The soak: re-trace rate 0 + evictions + mid-soak oracle samples
+# ---------------------------------------------------------------------- #
+
+def test_soak_zero_retraces_after_warmup():
+    obs.reset_all()
+    # (tenant, program factory, two bounds variants in the same or adjacent
+    # power-of-two buckets)
+    structures = [
+        ("decode", decode_program, (12, 13)),
+        ("scan", lambda h: scan_program(3, h), (4, 5)),
+        ("doall", _doall_program, (16, 17)),
+    ]
+    waves = 20
+    with PlanService(
+        ServiceOptions(workers=2, plan_cache_capacity=2)
+    ) as svc:
+        # warmup wave: every (structure, bounds) pair runs once, paying
+        # whatever jit traces its buckets need
+        scan_exe = None
+        for tenant, make, bounds in structures:
+            for b in bounds:
+                res = svc.submit(make(b), tenant=tenant, run=True).result()
+                if tenant == "scan":
+                    scan_exe = res.executable
+        svc.drain()
+        traces_warm = metrics.counter("xla.traces").value
+        assert traces_warm > 0  # warmup actually traced something
+
+        # the two scan bounds (horizon 4 and 5) pad into the SAME bucket:
+        # one jit trace serves both — the tentpole's core claim
+        assert scan_exe is not None
+        assert scan_exe.compiled.trace_count == 1
+        assert scan_exe.compiled.bucket_count == 1
+
+        # soak: 20 waves over the warm set; the "mixed" tenant replays all
+        # six keys through its capacity-2 LRU every wave (guaranteed
+        # eviction churn) without touching the per-structure tenants
+        for wave in range(waves):
+            results = []
+            for tenant, make, bounds in structures:
+                prog = make(bounds[wave % 2])
+                sample = wave in (5, 10, 15)
+                results.append(
+                    (prog, svc.submit(prog, tenant=tenant, run=sample))
+                )
+                svc.submit(prog, tenant="mixed")
+            for prog, fut in results:
+                res = fut.result()
+                if res.store is not None:  # sampled wave: oracle check
+                    assert res.store == run_sequential(
+                        prog, _fresh_initial(prog)
+                    ), f"soak diverged from oracle at wave {wave}"
+        stats = svc.drain()
+
+    # steady state: not a single new jit trace across all 20 waves
+    assert metrics.counter("xla.traces").value == traces_warm
+    # ...and the warm executions were bucket hits
+    assert metrics.counter("xla.bucket_hits").value > 0
+
+    # the chatty tenant churned its tight LRU...
+    assert stats["tenants"]["mixed"]["evictions"] > 0
+    assert stats["plan_cache"]["evictions"] > 0
+    assert metrics.counter("plan_cache.evictions").value > 0
+    # ...while the per-structure tenants stayed hot and untouched
+    for tenant in ("decode", "scan", "doall"):
+        assert stats["tenants"][tenant]["evictions"] == 0
+        assert stats["tenants"][tenant]["hits"] >= waves
+        assert stats["tenants"][tenant]["misses"] == 2  # the two bounds
+    assert stats["plan_cache"]["size"] <= 4 * 2  # per-tenant bound held
+    # the snapshot is the SERVE_sync artifact: it must be JSON-able
+    import json
+
+    json.dumps(stats)
+
+
+# ---------------------------------------------------------------------- #
+# Concurrency: structural misses == distinct structures under racing
+# submitters
+# ---------------------------------------------------------------------- #
+
+def test_six_submitters_keep_structural_misses_at_distinct_structures():
+    obs.reset_all()
+    from repro.compile import compile_cache_stats
+
+    programs = [decode_program(9), scan_program(3, 6), _doall_program(11)]
+    n_threads, per_thread = 6, 8
+    with PlanService(ServiceOptions(workers=4)) as svc:
+        barrier = threading.Barrier(n_threads)
+        futures, errs = [], []
+        lock = threading.Lock()
+
+        def submitter(tid: int) -> None:
+            barrier.wait()  # maximize the race on the cold structures
+            try:
+                batch = [
+                    svc.submit(
+                        programs[(tid + k) % len(programs)], tenant=f"t{tid}"
+                    )
+                    for k in range(per_thread)
+                ]
+                with lock:
+                    futures.extend(batch)
+            except Exception as e:  # pragma: no cover - failure reporting
+                with lock:
+                    errs.append(e)
+
+        threads = [
+            threading.Thread(target=submitter, args=(i,))
+            for i in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        for fut in futures:
+            assert fut.result().executable is not None
+        stats = svc.drain()
+
+    cc = compile_cache_stats()
+    # per-structure admission: every cold structure was planned and lowered
+    # exactly once, no matter how many submitters raced it
+    assert cc["misses"] == len(programs), cc
+    assert cc["hits"] == n_threads * per_thread - len(programs), cc
+    assert stats["completed"] == n_threads * per_thread
+
+
+# ---------------------------------------------------------------------- #
+# Inspector memo across serve waves (PR 6 follow-up)
+# ---------------------------------------------------------------------- #
+
+def test_inspector_memo_hits_across_waves_with_changed_nonindex_data():
+    obs.reset_all()
+    exe = plan_rescore_sync(8)  # deps="speculate" sparse matvec
+    prog = exe.plan.program
+    rows = [3, 1, 0, 2, 7, 5, 4, 6]  # a permutation: no conflicts
+    cols = list(range(8))
+
+    store1 = indexed_store(prog, {"row": rows, "col": cols})
+    init1 = {a: dict(c) for a, c in store1.items()}
+    out1 = exe.run(store={a: dict(c) for a, c in store1.items()})
+    assert out1 == run_sequential(prog, init1)
+    s1 = inspector_cache_stats()
+    assert s1["misses"] >= 1  # the first wave's validation inspected
+
+    # wave 2: identical index contents, different *non-index* data — the
+    # instance graph is unchanged, so validation must be a memo HIT; a
+    # regression here reads as a counter bump, not a slowdown
+    store2 = indexed_store(prog, {"row": rows, "col": cols})
+    for arr in ("v", "x"):
+        for cell in store2[arr]:
+            store2[arr][cell] = store2[arr][cell] + 7.25
+    init2 = {a: dict(c) for a, c in store2.items()}
+    out2 = exe.run(store={a: dict(c) for a, c in store2.items()})
+    assert out2 == run_sequential(prog, init2)
+    assert out2 != out1  # the data change was real
+    s2 = inspector_cache_stats()
+    assert s2["misses"] == s1["misses"], "non-index change re-inspected"
+    assert s2["hits"] == s1["hits"] + 1
+
+    # no rollbacks: the permutation rows carry no conflict
+    assert metrics.counter("speculation.rollbacks").value == 0
+
+    # int-vs-float index contents digest identically (the PR 6 bug: the
+    # raw-repr digest split {"row": [3, ...]} from {"row": [3.0, ...]} into
+    # two memo entries)
+    from repro.core.inspector import index_content_digest
+
+    store_f = indexed_store(prog, {"row": rows, "col": cols})
+    for arr in ("row", "col"):
+        for cell in store_f[arr]:
+            store_f[arr][cell] = float(store_f[arr][cell])
+    assert index_content_digest(prog, store_f) == index_content_digest(
+        prog, store2
+    )
+    inspect_dependences(prog, store_f)
+    s3 = inspector_cache_stats()
+    assert s3["misses"] == s2["misses"]
+    assert s3["hits"] == s2["hits"] + 1
