@@ -283,6 +283,51 @@ def main() -> None:
         [(e.src_stmt, e.dst_stmt) for e in pp_plan.events],
     )
 
+    print()
+    print("=" * 70)
+    print("6. Multi-device SPMD wavefront backend (xla_spmd)")
+    print("=" * 70)
+    # The fifth backend shards each level's padded lane tables across a
+    # jax mesh (shard_map: per-device lane slice, one all_gather per step)
+    # while the per-lane arithmetic stays the strict laundered ops — so
+    # sharded executions stay bit-equal to the sequential oracle (the
+    # oracle still decides semantics; the corpus checks xla_spmd
+    # differentially like every other backend).  Its collective-aware cost
+    # hook charges the all-gather tax against the per-lane savings, so the
+    # SAME plan chunks a wide recurrence on one device but skews it on a
+    # mesh.  Run with
+    #     XLA_FLAGS=--xla_force_host_platform_device_count=8
+    # to execute truly sharded; force_device_count(8) below pins only the
+    # COST model, so the auction is visible from any process (execution
+    # degrades safely to however many devices really exist).
+    from repro.compile import spmd
+
+    wide = LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, 40), (0, 96)),
+    )
+    p6 = plan(wide, PlanOptions(method="isd"))
+    spmd.force_device_count(8)
+    for backend in ("xla", "xla_spmd"):
+        (r,) = p6.compile(backend).report().summary()["scc"]["recurrences"]
+        offers = {k: round(v) for k, v in r["offers"].items()}
+        print(f"  {backend:<10s} strategy={r['strategy']} offers={offers}")
+    out = p6.compile("xla_spmd").run()
+    print(
+        "  xla_spmd bit-equal to sequential oracle:",
+        out == run_sequential(wide, wide.initial_store()),
+        f"(sharded over {spmd.shard_count()} device(s); cost model assumed "
+        f"{spmd.device_count()})",
+    )
+    spmd.force_device_count(None)
+    obs.reset_all()
+
 
 if __name__ == "__main__":
     main()

@@ -93,12 +93,21 @@ class CompileCache:
 
     MAX_ENTRIES = 128
 
-    def __init__(self, metrics_prefix: Optional[str] = None) -> None:
+    def __init__(
+        self,
+        metrics_prefix: Optional[str] = None,
+        factory: Optional[type] = None,
+    ) -> None:
         self._entries: "collections.OrderedDict[str, CompiledProgram]" = (
             collections.OrderedDict()
         )
         self._lock = threading.Lock()
         self.stats = CacheStats(metrics_prefix)
+        # the artifact class this cache builds; per-backend caches (xla vs
+        # xla_spmd) install their own CompiledProgram subclass so artifacts
+        # never alias across backends even though structural_key carries no
+        # backend tag
+        self._factory = factory
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -144,6 +153,7 @@ class CompileCache:
 
         from repro.compile.lowering import CompiledProgram
 
+        factory = self._factory if self._factory is not None else CompiledProgram
         with _trace.span("compile.structural_lookup"):
             key = structural_key(
                 program, retained, model, processors, chunk_limit, scc_policy,
@@ -157,7 +167,7 @@ class CompileCache:
             self.stats.note(True)
             return entry, True
         with _trace.span("compile.build", key=key[:16]):
-            built = CompiledProgram(
+            built = factory(
                 key,
                 program,
                 retained,

@@ -393,6 +393,49 @@ class CompiledProgram:
         return self.cache.stats.as_dict()
 
     # ------------------------------------------------------------------ #
+    # Backend-specialization hooks.  The sharded artifact
+    # (repro.compile.spmd.SpmdCompiledProgram) overrides these; the base
+    # definitions pin the single-device behavior exactly as before.
+    # ------------------------------------------------------------------ #
+
+    def _level_cost_hook(self):
+        """Per-level step-cost model handed to the scheduling policy."""
+
+        from repro.compile import xla_level_cost
+
+        return xla_level_cost
+
+    def _pad_lanes(self, wp: int) -> int:
+        """Final lane padding (``wp`` is already a power of two)."""
+
+        return wp
+
+    def _use_cond(self, wp: int) -> bool:
+        """Whether a statement of padded width ``wp`` gets a lax.cond (wide)
+        or runs condless with the active bit folded into the lane mask."""
+
+        return wp > 32
+
+    def _make_static(self, stmts, segments) -> _CaseStatic:
+        """Build the trace-shaping static for a prepared case."""
+
+        return _CaseStatic(stmts=stmts, segments=segments)
+
+    def _case_key_extra(self) -> Tuple:
+        """Extra components appended to the per-bounds case key (the sharded
+        artifact adds the shard count so re-meshing rebuilds tables without
+        touching the structural level)."""
+
+        return ()
+
+    def _lane_values(self, k, ss, store, ridx, width, opaque_zero):
+        """Gather + vectorized compute of one table row's lanes (the part of
+        a group step the sharded artifact splits across devices)."""
+
+        reads = [store[a][ix] for a, ix in zip(ss.reads, ridx)]
+        return self._batched[k](reads, width, opaque_zero)
+
+    # ------------------------------------------------------------------ #
     @staticmethod
     def _make_batched(stmt):
         """Vectorized compute over whole lane vectors.
@@ -505,6 +548,7 @@ class CompiledProgram:
             program.bounds,
             self._layout_key(dense),
             self._content_key(program, dense),
+            *self._case_key_extra(),
         )
         with self._lock:
             case = self._cases.get(key)
@@ -530,11 +574,13 @@ class CompiledProgram:
                 f"store is missing arrays {missing} referenced by the program"
             )
         # schedule under the compiled backend's own step-cost model: the
-        # default scheduling policy scores strategies through
-        # xla_level_cost, so the same "auto" knob can resolve to chunk here
-        # while the NumPy interpreter resolves it to skew (forced strategies
-        # and explicit policy instances are untouched by the hook)
-        from repro.compile import xla_level_cost
+        # default scheduling policy scores strategies through the artifact's
+        # level-cost hook (xla_level_cost here, the collective-aware
+        # spmd_level_cost in the sharded subclass), so the same "auto" knob
+        # can resolve to chunk here while the NumPy interpreter resolves it
+        # to skew (forced strategies and explicit policy instances are
+        # untouched by the hook)
+        level_cost = self._level_cost_hook()
 
         retained = list(self.retained)
         instance_edges = None
@@ -560,7 +606,7 @@ class CompiledProgram:
             processors=self.processors,
             chunk_limit=self.chunk_limit,
             scc_policy=self.scc_policy,
-            level_cost=xla_level_cost,
+            level_cost=level_cost,
             instance_edges=instance_edges,
         )
         n_levels = sched.depth
@@ -584,7 +630,7 @@ class CompiledProgram:
             entries = per_stmt.get(s.name, [])
             G = len(entries)
             W = max((pts.shape[0] for _, pts in entries), default=1)
-            Gp, Wp = _next_pow2(G + 1), _next_pow2(W)
+            Gp, Wp = _next_pow2(G + 1), self._pad_lanes(_next_pow2(W))
 
             glevel = np.full(Gp, n_levels, dtype=np.int32)  # sentinel rows
             lanemask = np.zeros((Gp, Wp), dtype=bool)
@@ -694,7 +740,7 @@ class CompiledProgram:
                     cov_reads=cov_reads,
                     cov_guard=cov_guard,
                     cov_write=cov_write,
-                    use_cond=Wp > 32,
+                    use_cond=self._use_cond(Wp),
                 )
             )
             table = {
@@ -711,13 +757,20 @@ class CompiledProgram:
                 table["oob"] = oob
             tables.append(table)
 
+        # Segment hybrid schedules AND inspect schedules: the band detector
+        # only looks at per-level (statement, row) lockstep runs, which is
+        # strategy-agnostic — an inspector-scheduled serialized chain lowers
+        # to the same nested-fori recurrence band a chunked DOACROSS does,
+        # instead of paying the generic per-level cursor dispatcher.
         segments, seg_dyn = None, ()
-        if sched.scc is not None and sched.scc.recurrences:
+        if (
+            sched.scc is not None and sched.scc.recurrences
+        ) or instance_edges is not None:
             segments, seg_dyn = self._segment_levels(
                 program, sched, n_levels, len(program.statements)
             )
 
-        static = _CaseStatic(stmts=tuple(stmt_statics), segments=segments)
+        static = self._make_static(tuple(stmt_statics), segments)
         # The trace identity, computed host-side: everything jax's jit cache
         # keys a trace on — the statics plus the bucketed argument shapes
         # (level tables, padded store/coverage buffers, segment scalars).
@@ -895,8 +948,9 @@ class CompiledProgram:
                 oob_row = row(t["oob"])
                 bad = bad.at[0].set(bad[0] | jnp.any(mask & oob_row))
                 mask = mask & ~oob_row
-            reads = [store[a][ix] for a, ix in zip(ss.reads, ridx)]
-            vals = self._batched[k](reads, lanes.shape[0], opaque_zero)
+            vals = self._lane_values(
+                k, ss, store, ridx, lanes.shape[0], opaque_zero
+            )
             trash = store[ss.write].shape[0] - 1
             tgt = jnp.where(mask, row(t["widx"]), trash)
             new_write = store[ss.write].at[tgt].set(vals)

@@ -138,7 +138,10 @@ _REGISTRY: Dict[str, BackendSpec] = {}
 
 # Backends that register themselves on first use (import side effect), so
 # e.g. requesting "xla" does not cost a jax import until someone asks for it.
-_LAZY_BACKENDS: Dict[str, str] = {"xla": "repro.compile"}
+_LAZY_BACKENDS: Dict[str, str] = {
+    "xla": "repro.compile",
+    "xla_spmd": "repro.compile.spmd",
+}
 
 
 def register_backend(spec: BackendSpec) -> None:

@@ -73,6 +73,12 @@ def reset_all() -> None:
     cache_mod = sys.modules.get("repro.compile.cache")
     if cache_mod is not None:
         cache_mod.clear_compile_cache()
+    # the SPMD backend memoizes mesh/device handles (and owns its own
+    # structural cache); dropping them keeps tests that vary
+    # --xla_force_host_platform_device_count order-independent
+    spmd_mod = sys.modules.get("repro.compile.spmd")
+    if spmd_mod is not None:
+        spmd_mod.reset_spmd_caches()
     # likewise the plan service's per-tenant LRUs (repro.serve): discard the
     # process-default service so plan_cache.* counters and cache contents
     # reset together

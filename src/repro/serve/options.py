@@ -28,6 +28,10 @@ class ServiceOptions:
     one cold structure never plans twice).
     ``plan_cache_capacity``: per-tenant bound of the plan/artifact LRU
     (evictions surface as ``plan_cache.evictions`` in ``obs.metrics``).
+    ``plan_cache_bytes``: byte budget over ALL tenants' cached entries —
+    each entry carries an estimated footprint of its plan plus compiled
+    artifact, the total rides the ``plan_cache.bytes`` gauge, and the LRU
+    evicts past-budget entries oldest-first (count bound still applies).
     ``max_queue_depth``: admission bound — ``submit()`` beyond this many
     outstanding requests is rejected instead of queueing without limit.
     ``default_tenant``: tenant used when ``submit()``/``resolve()`` are not
@@ -37,6 +41,7 @@ class ServiceOptions:
     backend: str = "xla"
     workers: int = 2
     plan_cache_capacity: int = 16
+    plan_cache_bytes: int = 64 * 1024 * 1024
     max_queue_depth: int = 64
     default_tenant: str = "default"
 
@@ -62,7 +67,12 @@ class ServiceOptions:
                 f"{self.backend!r}"
             )
         get_backend(self.backend)  # raises naming the registered set
-        for knob in ("workers", "plan_cache_capacity", "max_queue_depth"):
+        for knob in (
+            "workers",
+            "plan_cache_capacity",
+            "plan_cache_bytes",
+            "max_queue_depth",
+        ):
             v = getattr(self, knob)
             if not isinstance(v, int) or isinstance(v, bool) or v < 1:
                 raise ValueError(

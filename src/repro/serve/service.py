@@ -23,10 +23,19 @@ Concurrency discipline:
 * *bounded admission*: more than ``max_queue_depth`` outstanding requests
   rejects at ``submit()`` instead of queueing without limit.
 
+Cache entries are *artifact-level*: an entry holds the plan plus, once the
+first request for it has compiled, the backend executable — warm requests
+skip ``SyncPlan.compile`` entirely (``plan_cache.artifact_hits``).  Each
+entry carries an estimated byte footprint; eviction enforces both the
+per-tenant count bound and a global byte budget
+(``ServiceOptions.plan_cache_bytes``), oldest-first from the heaviest
+tenant, with the running total on the ``plan_cache.bytes`` gauge.
+
 Observability (all in the unified ``repro.obs.metrics`` registry, so
 ``obs.reset_all()`` covers them): ``plan_cache.hits`` / ``plan_cache.misses``
-/ ``plan_cache.evictions`` counters and the ``plan_cache.size`` gauge for
-the per-tenant LRUs, the ``serve.queue_depth`` gauge, and per-tenant
+/ ``plan_cache.evictions`` / ``plan_cache.artifact_hits`` counters and the
+``plan_cache.size`` / ``plan_cache.bytes`` gauges for the per-tenant LRUs,
+the ``serve.queue_depth`` gauge, and per-tenant
 ``serve.latency_ms.<tenant>`` histograms beside the global
 ``serve.plan_ms`` / ``serve.compile_ms`` ones.
 """
@@ -70,16 +79,31 @@ class ServiceResult:
     latency_ms: float
 
 
-class _TenantCache:
-    """One tenant's bounded plan LRU (counters are plain ints here; the
-    registry-backed totals are maintained by the owning service)."""
+class _CacheEntry:
+    """One artifact-level LRU entry: the plan, the compiled executable once
+    a request has built it (so warm requests skip ``SyncPlan.compile``
+    entirely), and the entry's estimated byte footprint."""
 
-    __slots__ = ("entries", "hits", "misses", "evictions")
+    __slots__ = ("plan", "executable", "nbytes")
+
+    def __init__(self, plan: SyncPlan, nbytes: int) -> None:
+        self.plan = plan
+        self.executable: Optional[Executable] = None
+        self.nbytes = nbytes
+
+
+class _TenantCache:
+    """One tenant's bounded plan/artifact LRU (counters are plain ints
+    here; the registry-backed totals are maintained by the owning
+    service)."""
+
+    __slots__ = ("entries", "bytes", "hits", "misses", "evictions")
 
     def __init__(self) -> None:
-        self.entries: "collections.OrderedDict[Tuple, SyncPlan]" = (
+        self.entries: "collections.OrderedDict[Tuple, _CacheEntry]" = (
             collections.OrderedDict()
         )
+        self.bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -94,6 +118,62 @@ def _options_key(options: PlanOptions) -> object:
         return options
     except TypeError:
         return repr(options)
+
+
+_SKIP_MODULES = ("_thread", "threading", "concurrent.futures", "builtins")
+
+
+def _approx_nbytes(obj, _seen=None, _depth: int = 0) -> int:
+    """Defensive recursive footprint estimate of a cache entry.
+
+    Arrays report ``.nbytes`` (numpy and jax alike — the level tables and
+    device buffers that dominate a compiled artifact); containers,
+    dataclasses and slotted objects are walked to a bounded depth with a
+    visited set; callables, modules, locks and thread machinery are
+    skipped.  This is an *estimate* for eviction accounting, not an exact
+    resident-size: structure shared between entries (e.g. one structural
+    artifact behind two bounds) is charged to each entry that references
+    it, which over-counts — the conservative direction for a byte budget.
+    """
+
+    import sys as _sys
+
+    if _seen is None:
+        _seen = set()
+    if _depth > 8 or id(obj) in _seen:
+        return 0
+    _seen.add(id(obj))
+    try:
+        nbytes = getattr(obj, "nbytes", None)
+        if isinstance(nbytes, int):
+            return nbytes
+        if obj is None or isinstance(obj, (bool, int, float, complex)):
+            return _sys.getsizeof(obj)
+        if isinstance(obj, (str, bytes, bytearray)):
+            return _sys.getsizeof(obj)
+        if callable(obj) or type(obj).__module__ in _SKIP_MODULES:
+            return 0
+        total = _sys.getsizeof(obj, 0)
+        if isinstance(obj, Mapping):
+            items = list(obj.items())[:256]
+            for k, v in items:
+                total += _approx_nbytes(k, _seen, _depth + 1)
+                total += _approx_nbytes(v, _seen, _depth + 1)
+            return total
+        if isinstance(obj, (list, tuple, set, frozenset)):
+            for v in list(obj)[:256]:
+                total += _approx_nbytes(v, _seen, _depth + 1)
+            return total
+        state = getattr(obj, "__dict__", None)
+        if state:
+            total += _approx_nbytes(state, _seen, _depth + 1)
+        for slot in getattr(type(obj), "__slots__", ()) or ():
+            total += _approx_nbytes(
+                getattr(obj, slot, None), _seen, _depth + 1
+            )
+        return total
+    except Exception:
+        return 0
 
 
 class PlanService:
@@ -134,6 +214,34 @@ class PlanService:
     def _cache_size(self) -> int:
         return sum(len(t.entries) for t in self._tenants.values())
 
+    def _cache_bytes(self) -> int:
+        return sum(t.bytes for t in self._tenants.values())
+
+    def _evict_locked(self, cache: _TenantCache) -> None:
+        """Enforce both LRU bounds (caller holds ``self._lock``): the
+        per-tenant entry count, then the global byte budget — bytes evict
+        oldest-first from whichever tenant currently holds the most."""
+
+        while len(cache.entries) > self.options.plan_cache_capacity:
+            self._pop_oldest_locked(cache)
+        while self._cache_bytes() > self.options.plan_cache_bytes:
+            victim = max(
+                (t for t in self._tenants.values() if t.entries),
+                key=lambda t: t.bytes,
+                default=None,
+            )
+            if victim is None:
+                break
+            self._pop_oldest_locked(victim)
+        _metrics.gauge("plan_cache.size").set(self._cache_size())
+        _metrics.gauge("plan_cache.bytes").set(self._cache_bytes())
+
+    def _pop_oldest_locked(self, cache: _TenantCache) -> None:
+        _, entry = cache.entries.popitem(last=False)
+        cache.bytes -= entry.nbytes
+        cache.evictions += 1
+        _metrics.counter("plan_cache.evictions").inc()
+
     def resolve(
         self,
         program: LoopProgram,
@@ -145,6 +253,21 @@ class PlanService:
         admission.  Returns ``(plan, cached)``; records ``serve.plan_ms``
         (every call, hits included — the latency a serving wave observes)
         and the per-tenant ``plan_cache.*`` counters."""
+
+        plan_obj, cached, _ = self._resolve_entry(
+            program, options, tenant=tenant
+        )
+        return plan_obj, cached
+
+    def _resolve_entry(
+        self,
+        program: LoopProgram,
+        options: Optional[PlanOptions] = None,
+        *,
+        tenant: Optional[str] = None,
+    ) -> Tuple[SyncPlan, bool, Tuple[str, Tuple]]:
+        """``resolve`` plus the ``(tenant, key)`` handle ``_handle`` needs
+        to find the entry again when attaching a compiled artifact."""
 
         tenant = tenant if tenant is not None else self.options.default_tenant
         options = options if options is not None else PlanOptions()
@@ -164,7 +287,7 @@ class PlanService:
             _metrics.histogram("serve.plan_ms").observe(
                 (time.perf_counter() - t0) * 1e3
             )
-            return cached, True
+            return cached.plan, True, (tenant, key)
         # per-structure admission: one planner per structure at a time, so
         # racing submitters of a cold structure queue here instead of
         # planning (and structurally compiling) the same thing twice
@@ -179,21 +302,19 @@ class PlanService:
                 _metrics.histogram("serve.plan_ms").observe(
                     (time.perf_counter() - t0) * 1e3
                 )
-                return cached, True
+                return cached.plan, True, (tenant, key)
             built = _plan(program, options)
+            entry = _CacheEntry(built, _approx_nbytes(built))
             with self._lock:
                 cache.misses += 1
-                cache.entries[key] = built
-                while len(cache.entries) > self.options.plan_cache_capacity:
-                    cache.entries.popitem(last=False)
-                    cache.evictions += 1
-                    _metrics.counter("plan_cache.evictions").inc()
-                _metrics.gauge("plan_cache.size").set(self._cache_size())
+                cache.entries[key] = entry
+                cache.bytes += entry.nbytes
+                self._evict_locked(cache)
         _metrics.counter("plan_cache.misses").inc()
         _metrics.histogram("serve.plan_ms").observe(
             (time.perf_counter() - t0) * 1e3
         )
-        return built, False
+        return built, False, (tenant, key)
 
     # ------------------------------------------------------------------ #
     # The public request surface
@@ -254,16 +375,43 @@ class PlanService:
     ) -> ServiceResult:
         tenant = tenant if tenant is not None else self.options.default_tenant
         t0 = time.perf_counter()
-        plan_obj, cached = self.resolve(program, options, tenant=tenant)
+        plan_obj, cached, (tenant, key) = self._resolve_entry(
+            program, options, tenant=tenant
+        )
         tc = time.perf_counter()
-        # compile under the same per-structure admission lock as planning:
-        # get_or_compile counts a lost race as a second structural miss, so
-        # without this two workers handling the same cold structure would
-        # both lower it and the miss count would exceed #distinct structures
-        from repro.compile.structure import program_fingerprint
+        executable = None
+        with self._lock:
+            entry = self._tenant(tenant).entries.get(key)
+            if entry is not None and entry.executable is not None:
+                executable = entry.executable
+        if executable is not None:
+            _metrics.counter("plan_cache.artifact_hits").inc()
+        else:
+            # compile under the same per-structure admission lock as
+            # planning: get_or_compile counts a lost race as a second
+            # structural miss, so without this two workers handling the same
+            # cold structure would both lower it and the miss count would
+            # exceed #distinct structures
+            from repro.compile.structure import program_fingerprint
 
-        with self._structure_lock(program_fingerprint(program)):
-            executable = plan_obj.compile(self.options.backend)
+            with self._structure_lock(program_fingerprint(program)):
+                executable = plan_obj.compile(self.options.backend)
+            extra = _approx_nbytes(executable)
+            with self._lock:
+                cache = self._tenant(tenant)
+                entry = cache.entries.get(key)
+                # attach the artifact so later requests skip compile();
+                # entry may have been evicted (or replaced by a racing
+                # re-plan) since resolve — then the artifact is just not
+                # cached, which is correct
+                if entry is not None and entry.plan is plan_obj:
+                    if entry.executable is None:
+                        entry.executable = executable
+                        entry.nbytes += extra
+                        cache.bytes += extra
+                        self._evict_locked(cache)
+                    else:
+                        executable = entry.executable
         _metrics.histogram("serve.compile_ms").observe(
             (time.perf_counter() - tc) * 1e3
         )
@@ -309,6 +457,7 @@ class PlanService:
             tenants = {
                 name: {
                     "size": len(t.entries),
+                    "bytes": t.bytes,
                     "hits": t.hits,
                     "misses": t.misses,
                     "evictions": t.evictions,
@@ -321,6 +470,8 @@ class PlanService:
                 "tenants": tenants,
                 "plan_cache": {
                     "size": self._cache_size(),
+                    "bytes": self._cache_bytes(),
+                    "bytes_budget": self.options.plan_cache_bytes,
                     "capacity_per_tenant": self.options.plan_cache_capacity,
                     "hits": sum(t.hits for t in self._tenants.values()),
                     "misses": sum(t.misses for t in self._tenants.values()),

@@ -124,10 +124,14 @@ def test_submit_runs_and_matches_oracle():
         assert res2.plan_cached is True
         assert res2.store == res.store
         stats = svc.drain()
-        assert stats["tenants"]["t0"] == {
+        t0_stats = dict(stats["tenants"]["t0"])
+        assert t0_stats.pop("bytes") > 0  # artifact entries are byte-accounted
+        assert t0_stats == {
             "size": 1, "hits": 1, "misses": 1, "evictions": 0,
         }
         assert stats["submitted"] == stats["completed"] == 2
+        # the second request reused the cached compiled artifact
+        assert metrics.counter("plan_cache.artifact_hits").value == 1
 
 
 def test_admission_bound_and_close_reject():
@@ -279,7 +283,11 @@ def test_six_submitters_keep_structural_misses_at_distinct_structures():
     # per-structure admission: every cold structure was planned and lowered
     # exactly once, no matter how many submitters raced it
     assert cc["misses"] == len(programs), cc
-    assert cc["hits"] == n_threads * per_thread - len(programs), cc
+    # every other request was served without lowering: either a structural
+    # compile-cache hit or (for a same-tenant repeat) an artifact-level hit
+    # that skipped compile() entirely
+    art = metrics.counter("plan_cache.artifact_hits").value
+    assert cc["hits"] + art == n_threads * per_thread - len(programs), (cc, art)
     assert stats["completed"] == n_threads * per_thread
 
 
@@ -335,3 +343,48 @@ def test_inspector_memo_hits_across_waves_with_changed_nonindex_data():
     s3 = inspector_cache_stats()
     assert s3["misses"] == s2["misses"]
     assert s3["hits"] == s2["hits"] + 1
+
+
+# ---------------------------------------------------------------------- #
+# Byte-accounted artifact LRU
+# ---------------------------------------------------------------------- #
+
+def test_byte_budget_evicts_and_gauge_tracks():
+    obs.reset_all()
+    prog = decode_program(8)
+    # a 1-byte budget: every entry is over budget the moment it lands, so
+    # the LRU retains nothing — yet requests still resolve and run
+    # correctly (the budget bounds memory, never correctness)
+    with PlanService(
+        ServiceOptions(workers=1, plan_cache_bytes=1)
+    ) as svc:
+        for _ in range(3):
+            res = svc.submit(prog, tenant="t", run=True).result()
+            assert res.store == run_sequential(prog, _fresh_initial(prog))
+        stats = svc.drain()
+    assert stats["plan_cache"]["size"] == 0
+    assert stats["plan_cache"]["bytes"] == 0
+    assert stats["plan_cache"]["bytes_budget"] == 1
+    assert stats["plan_cache"]["evictions"] == 3
+    assert stats["tenants"]["t"]["misses"] == 3  # nothing survived to hit
+    assert metrics.gauge("plan_cache.bytes").value == 0
+    assert metrics.counter("plan_cache.evictions").value == 3
+
+    obs.reset_all()
+    # the default (roomy) budget: the entry — plan plus the compiled
+    # artifact attached by the first request — stays resident and its
+    # estimated footprint rides the plan_cache.bytes gauge
+    with PlanService(ServiceOptions(workers=1)) as svc:
+        svc.submit(prog, tenant="t", run=True).result()
+        res2 = svc.submit(prog, tenant="t", run=True).result()
+        assert res2.plan_cached is True
+        stats = svc.drain()
+    assert stats["plan_cache"]["evictions"] == 0
+    assert stats["plan_cache"]["bytes"] > 0
+    assert stats["tenants"]["t"]["bytes"] == stats["plan_cache"]["bytes"]
+    assert (
+        metrics.gauge("plan_cache.bytes").value
+        == stats["plan_cache"]["bytes"]
+    )
+    # the warm request reused the attached artifact instead of compiling
+    assert metrics.counter("plan_cache.artifact_hits").value == 1

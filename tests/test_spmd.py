@@ -1,0 +1,354 @@
+"""The multi-device SPMD wavefront backend (:mod:`repro.compile.spmd`).
+
+Four contracts under test:
+
+* **Collective-aware policy divergence** — the same ``SyncPlan`` compiled
+  for ``xla`` and ``xla_spmd`` picks *different* strategies for the same
+  recurrence SCC when a mesh is available: the wide ``{(0,1),(1,-1)}``
+  recurrence chunks on one device but skews on eight (lane savings beat
+  the collective tax), while a narrow blocked recurrence keeps chunking on
+  eight (sharding loses) — both auctions recorded in
+  ``summary()["scc"]`` offers.
+* **Degenerate mesh** — a 1-device mesh takes the base lowering's exact
+  code path: no ``shard_map``, zero ``spmd.collectives``, bit-equal.
+* **Reset discipline** — ``obs.reset_all()`` clears the forced device
+  count, the cached mesh handles and the backend's structural cache, so
+  tests that vary device counts stay order-independent.
+* **Real 8-device sharding** (subprocess — ``XLA_FLAGS`` must be set
+  before jax imports): a mini-corpus (wide recurrence, the paper's cyclic
+  alg6, non-affine inspect programs) stays bit-equal to the sequential
+  oracle under real sharding, and re-meshing the same structure is a
+  structural cache HIT whose per-device-count cases land in different
+  buckets (``_SpmdCaseStatic.n_shards`` rides the jit static, never the
+  structural key).
+
+Plus the PR's lowering satellite: inspect-scheduled (instance-edge)
+programs now lower through the recurrence-band path instead of the
+generic per-level cursor loop.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+import repro.obs as obs
+from repro.obs import metrics
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    PlanOptions,
+    Statement,
+    histogram,
+    indexed_store,
+    paper_alg6,
+    plan,
+    registered_backends,
+    run_sequential,
+)
+from repro.compile import spmd
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _fresh(prog: LoopProgram) -> dict:
+    return {a: dict(c) for a, c in prog.initial_store().items()}
+
+
+def wide_recurrence(ni: int, nj: int) -> LoopProgram:
+    """{(0,1), (1,-1)}: chunking is fully serial (unit chunks) while a
+    unimodular skew runs an ``nj``-wide diagonal wavefront — the sharding
+    sweet spot."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+def narrow_blocked_recurrence(n: int) -> LoopProgram:
+    """{(0,-32), (-1,1)}: the (0,-32) dep admits 32-iteration DOACROSS
+    chunks, so chunking is cheap and the skewed wavefront's lanes never
+    amortize the collective tax — sharding should lose here."""
+
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -32)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, n), (0, n)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Registration
+# ---------------------------------------------------------------------- #
+
+def test_backend_registered():
+    assert "xla_spmd" in registered_backends()
+
+
+def test_unknown_option_rejected_naming_accepted_set():
+    prog = wide_recurrence(4, 4)
+    with pytest.raises(ValueError) as exc:
+        plan(prog, method="isd").compile("xla_spmd", bogus_knob=1)
+    assert "bogus_knob" in str(exc.value)
+
+
+# ---------------------------------------------------------------------- #
+# Collective-aware policy divergence (cost model only — execution still
+# degrades to one device inside a single-device pytest process)
+# ---------------------------------------------------------------------- #
+
+def test_wide_recurrence_diverges_shard_vs_chunk():
+    obs.reset_all()
+    spmd.force_device_count(8)
+    try:
+        prog = wide_recurrence(40, 96)
+        p = plan(prog, method="isd")
+        exe_xla = p.compile("xla")
+        exe_spmd = p.compile("xla_spmd")
+        (rec_x,) = exe_xla.report().summary()["scc"]["recurrences"]
+        (rec_s,) = exe_spmd.report().summary()["scc"]["recurrences"]
+        # one device: chunking wins; eight devices: the skewed wavefront's
+        # 96 lanes split 8 ways beat the per-step all_gather
+        assert rec_x["strategy"] == "chunk"
+        assert rec_s["strategy"] == "skew"
+        # both auctions scored both offers — the SYNC_REPORTS-diffable part
+        assert rec_x["offers"]["chunk"] < rec_x["offers"]["skew"]
+        assert rec_s["offers"]["skew"] < rec_s["offers"]["chunk"]
+        # and both executions stay bit-equal to the oracle
+        oracle = run_sequential(prog, _fresh(prog))
+        assert exe_xla.run(store=_fresh(prog)) == oracle
+        assert exe_spmd.run(store=_fresh(prog)) == oracle
+    finally:
+        spmd.force_device_count(None)
+
+
+def test_narrow_recurrence_keeps_chunking_on_wide_mesh():
+    obs.reset_all()
+    spmd.force_device_count(8)
+    try:
+        prog = narrow_blocked_recurrence(32)
+        exe = plan(prog, method="isd").compile("xla_spmd")
+        (rec,) = exe.report().summary()["scc"]["recurrences"]
+        # sharding loses: the auction keeps chunking even with 8 devices
+        assert rec["strategy"] == "chunk"
+        assert rec["offers"]["chunk"] < rec["offers"]["skew"]
+        # the (0,-32) read reaches 32 cells back — widen the store pad
+        init = {a: dict(c) for a, c in prog.initial_store(pad=33).items()}
+        assert exe.run(
+            store={a: dict(c) for a, c in init.items()}
+        ) == run_sequential(prog, init)
+    finally:
+        spmd.force_device_count(None)
+
+
+def test_degenerate_cost_model_matches_xla():
+    """At device_count()==1 the spmd cost hook must equal xla_level_cost —
+    the degenerate mesh must not perturb single-device auctions."""
+
+    obs.reset_all()
+    prog = wide_recurrence(40, 96)
+    p = plan(prog, method="isd")
+    (rec_x,) = p.compile("xla").report().summary()["scc"]["recurrences"]
+    (rec_s,) = p.compile("xla_spmd").report().summary()["scc"]["recurrences"]
+    assert rec_s["strategy"] == rec_x["strategy"]
+    assert rec_s["offers"] == rec_x["offers"]
+
+
+# ---------------------------------------------------------------------- #
+# Degenerate single-device mesh
+# ---------------------------------------------------------------------- #
+
+def test_single_device_mesh_collapses_to_base_trace():
+    obs.reset_all()
+    prog = paper_alg6(16)
+    exe = plan(prog, method="isd").compile("xla_spmd")
+    out = exe.run(store=_fresh(prog))
+    assert out == run_sequential(prog, _fresh(prog))
+    # no shard_map, no collectives — the single-device trace, literally
+    assert metrics.counter("spmd.collectives").value == 0
+    assert metrics.gauge("spmd.devices").value == 1
+    for case in exe.compiled._cases.values():
+        assert case.static.n_shards == 1
+
+
+def test_spmd_artifacts_never_alias_xla_artifacts():
+    """Same structure, both backends: each backend's cache hands back its
+    own artifact class (structural keys carry no backend tag — the
+    isolation lives in the cache instance)."""
+
+    obs.reset_all()
+    prog = paper_alg6(12)
+    p = plan(prog, method="isd")
+    exe_xla = p.compile("xla")
+    exe_spmd = p.compile("xla_spmd")
+    assert exe_xla.compiled is not exe_spmd.compiled
+    assert type(exe_spmd.compiled) is spmd.SpmdCompiledProgram
+    assert type(exe_xla.compiled) is not spmd.SpmdCompiledProgram
+
+
+# ---------------------------------------------------------------------- #
+# Reset discipline (the obs.reset_all() satellite)
+# ---------------------------------------------------------------------- #
+
+def test_reset_all_clears_forced_count_and_mesh_handles():
+    spmd.force_device_count(8)
+    assert spmd.device_count() == 8
+    spmd._MESHES[99] = object()  # stand-in for a cached mesh handle
+    obs.reset_all()
+    assert spmd._FORCED is None
+    assert spmd._ACTUAL is None  # re-read from jax on next use
+    assert spmd._MESHES == {}
+    assert spmd.device_count() == spmd._actual_devices()
+    assert spmd.shard_count() == spmd._actual_devices()
+
+
+# ---------------------------------------------------------------------- #
+# Inspect-scheduled programs lower through the recurrence-band path
+# ---------------------------------------------------------------------- #
+
+def test_inspect_schedule_takes_recurrence_band_path():
+    obs.reset_all()
+    prog = histogram(8)
+    # every iteration hits the same bin: the instance graph is a serial
+    # chain, i.e. eight single-lane levels — a recurrence band
+    store = indexed_store(prog, {"bin": [3] * 8})
+    init = {a: dict(c) for a, c in store.items()}
+    oracle = run_sequential(prog, init)
+    for backend in ("xla", "xla_spmd"):
+        p = plan(prog, PlanOptions(deps="inspect"))
+        exe = p.compile(backend)
+        assert exe.run(store=init) == oracle
+        (case,) = exe.compiled._cases.values()
+        assert case.static.segments is not None
+        assert any(seg[0] == "rec" for seg in case.static.segments), (
+            backend,
+            case.static.segments,
+        )
+
+
+def test_inspect_parallel_rows_stay_bit_equal():
+    obs.reset_all()
+    prog = histogram(8)
+    # distinct bins: fully parallel — no band, still bit-equal
+    store = indexed_store(prog, {"bin": list(range(8))})
+    init = {a: dict(c) for a, c in store.items()}
+    oracle = run_sequential(prog, init)
+    p = plan(prog, PlanOptions(deps="inspect"))
+    assert p.compile("xla_spmd").run(store=init) == oracle
+
+
+# ---------------------------------------------------------------------- #
+# Real 8-device sharding (subprocess: XLA_FLAGS precedes jax import)
+# ---------------------------------------------------------------------- #
+
+_SUBPROCESS_SCRIPT = textwrap.dedent(
+    """
+    import jax
+
+    assert jax.device_count() == 8, jax.device_count()
+
+    import repro.obs as obs
+    from repro.obs import metrics
+    from repro.compile import spmd
+    from repro.compile.spmd import SPMD_CACHE
+    from repro.core import (
+        ArrayRef, LoopProgram, PlanOptions, Statement, histogram,
+        indexed_store, paper_alg6, plan, run_sequential, sparse_matvec,
+    )
+
+    def fresh(prog, store=None):
+        src = store if store is not None else prog.initial_store()
+        return {a: dict(c) for a, c in src.items()}
+
+    def wide(ni, nj):
+        return LoopProgram(
+            statements=(
+                Statement(
+                    "S1",
+                    ArrayRef("a", (0, 0)),
+                    (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+                ),
+            ),
+            bounds=((0, ni), (0, nj)),
+        )
+
+    # -- mini-corpus bit-equality under real sharding ------------------- #
+    cases = []
+    w = wide(40, 96)
+    cases.append((w, PlanOptions(), None))
+    cases.append((paper_alg6(24), PlanOptions(), None))  # cyclic SCC
+    h = histogram(8)  # non-affine, serial chain -> recurrence band
+    cases.append((h, PlanOptions(deps="inspect"),
+                  indexed_store(h, {"bin": [3] * 8})))
+    sp = sparse_matvec(8)  # non-affine, two-rows-serial
+    cases.append((sp, PlanOptions(deps="inspect"),
+                  indexed_store(sp, {"row": [0, 0, 1, 1, 2, 2, 3, 3],
+                                     "col": list(range(8))})))
+    for prog, opts, store in cases:
+        init = fresh(prog, store)
+        oracle = run_sequential(prog, init)
+        exe = plan(prog, opts).compile("xla_spmd")
+        assert exe.run(store=fresh(prog, store)) == oracle, prog
+    assert metrics.gauge("spmd.devices").value == 8
+    assert metrics.counter("spmd.collectives").value > 0
+    assert metrics.histogram("spmd.shard_width").snapshot()["count"] > 0
+
+    # -- bucket identity across device counts --------------------------- #
+    obs.reset_all()  # clears SPMD_CACHE + forced count + mesh handles
+    prog = wide(40, 96)
+    oracle = run_sequential(prog, fresh(prog))
+    spmd.force_device_count(2)
+    exe2 = plan(prog, method="isd").compile("xla_spmd")
+    assert exe2.run(store=fresh(prog)) == oracle
+    assert SPMD_CACHE.stats.misses == 1
+    spmd.force_device_count(8)
+    exe8 = plan(prog, method="isd").compile("xla_spmd")
+    assert exe8.run(store=fresh(prog)) == oracle
+    # same structure on a different mesh: structural HIT, same artifact...
+    assert SPMD_CACHE.stats.misses == 1
+    assert SPMD_CACHE.stats.hits >= 1
+    assert exe8.compiled is exe2.compiled
+    # ...but the device count bucketed two distinct cases/traces
+    shards = sorted(
+        c.static.n_shards for c in exe8.compiled._cases.values()
+    )
+    assert shards == [2, 8], shards
+    assert exe8.compiled.bucket_count == 2
+    spmd.force_device_count(None)
+    print("SPMD-SUBPROCESS-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_real_eight_device_sharding_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=480,
+        env=env,
+        cwd=str(ROOT),
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SPMD-SUBPROCESS-OK" in proc.stdout

@@ -59,6 +59,8 @@ class TestDifferentialEquivalence:
             "wavefront/isd/optimized",
             "xla/isd/naive",
             "xla/isd/optimized",
+            "xla_spmd/isd/naive",
+            "xla_spmd/isd/optimized",
         }
 
 
