@@ -897,6 +897,86 @@ def bench_roofline_summary() -> None:
     )
 
 
+def bench_width_split_band() -> None:
+    """ROADMAP 3b acceptance: width-split band lowering on a forced-wide
+    skewed recurrence (96×192 — the diagonal ramps 1..96, padding every
+    level to 128 lanes without the ladder).  Split (default) and unsplit
+    (``WIDTH_LADDER_RUNGS = 0``) artifacts are built in LOCAL caches and
+    timed on the jitted callable directly — the O(cells) host wrapper
+    would bury the per-level lane saving — after asserting the two stores
+    bit-equal.  Ratio-gated split/unsplit (same process, same bounds)."""
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import analyze, insert_synchronization
+    from repro.core.wavefront import _DenseStore
+    from repro.compile import lowering
+    from repro.compile.cache import CompileCache
+    from repro.compile.executor import run_xla
+
+    prog = _wide_serialized_recurrence(96, 192)
+    sync = insert_synchronization(prog, analyze(prog))
+    store = prog.initial_store()
+
+    def jit_best_us(rungs: int, reps: int = 15) -> tuple:
+        saved = lowering.WIDTH_LADDER_RUNGS
+        lowering.WIDTH_LADDER_RUNGS = rungs
+        try:
+            cache = CompileCache()
+            rep = run_xla(
+                sync, cache=cache, scc_policy="skew", compare=False,
+                store=store,
+            )
+            comp = rep.compiled
+            dense = _DenseStore({a: dict(c) for a, c in store.items()})
+            case, _ = comp.prepare(sync.program, dense)
+        finally:
+            lowering.WIDTH_LADDER_RUNGS = saved
+        with jax.experimental.enable_x64():
+            dstore = {
+                a: jnp.zeros((case.padded_sizes[a],), jnp.float64)
+                .at[: case.flat_sizes[a]]
+                .set(jnp.asarray(dense.data[a].ravel()))
+                for a in case.arrays
+            }
+            cov = {
+                a: jnp.zeros((case.padded_sizes[a],), bool)
+                for a in case.sparse
+            }
+            args = (
+                case.static,
+                jnp.int64(case.n_levels),
+                tuple(jnp.asarray(d) for d in case.seg_dyn),
+                comp._to_device(case),
+                dstore,
+                cov,
+                jnp.zeros((2,), bool),
+                jnp.int64(0),
+            )
+            jax.block_until_ready(comp._jit(*args))  # warm the trace
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(comp._jit(*args))
+                best = min(best, time.perf_counter() - t0)
+        return best * 1e6, rep
+
+    split_us, rep_split = jit_best_us(3)
+    unsplit_us, rep_unsplit = jit_best_us(0)
+    assert rep_split.store == rep_unsplit.store, (
+        "width-split lowering diverged from the unsplit artifact"
+    )
+    ratio = split_us / unsplit_us
+    _row(
+        "width_split_band",
+        split_us,
+        f"unsplit_us={unsplit_us:.0f} rungs={lowering.WIDTH_LADDER_RUNGS} "
+        f"bit_equal=True",
+        ratio=ratio,
+    )
+
+
 # ---------------------------------------------------------------------- #
 
 BENCHES = [
@@ -915,6 +995,7 @@ BENCHES = [
     bench_scc_hybrid_pipeline,
     bench_skew_vs_chunk_wide,
     bench_xla_policy_backend_aware,
+    bench_width_split_band,
     bench_spmd_wide_wavefront,
     bench_inspector_sparse_matvec,
     bench_serve_sustained_traffic,
@@ -937,6 +1018,7 @@ KEY_BENCHES = (
     "cyclic_recurrence_1024",
     "scc_hybrid_pipeline",
     "skew_vs_chunk_wide",
+    "width_split_band",
     "spmd_wide_wavefront",
     "inspector_sparse_matvec",
     "serve_sustained_traffic",
@@ -966,6 +1048,10 @@ RATIO_TOLERANCES = {
     # so the gate pins relative drift of the shard_map dispatch overhead;
     # a multi-core runner only shrinks the ratio (never a false failure)
     "spmd_wide_wavefront": 3.00,
+    # split/unsplit jit-only times in one process: a broken ladder (or one
+    # silently pinned off) moves this ratio from ~0.6 to 1.0+, so the bound
+    # must sit below 1.0/0.6 — tighter than the default
+    "width_split_band": 1.50,
 }
 # Stable, CPU-bound, non-key transformation benches used to normalize out
 # absolute machine speed: the baseline is recorded on one machine and
@@ -1268,7 +1354,43 @@ def main(argv: List[str] | None = None) -> None:
         "plan->compile->run cycle (Chrome-trace events) to PATH — the "
         "observability CI artifact riding next to SYNC_REPORTS",
     )
+    ap.add_argument(
+        "--calibrate",
+        metavar="PATH",
+        default=None,
+        help="warm the per-host cost profile (repro.calibrate) before the "
+        "timed benches, write it to PATH (the CALIB_sync CI artifact), and "
+        "run the strategy-inversion gate against the CALIBRATED cost model "
+        "(a re-warm after the benches must reuse the persisted file with "
+        "zero re-measurement — asserted).  The timed benches and the "
+        "SYNC_REPORTS/OBS artifacts still run on the hand-set defaults so "
+        "their numbers stay machine-diffable",
+    )
     args = ap.parse_args(argv)
+
+    calib_payload = None
+    if args.calibrate:
+        import repro.calibrate as calibrate
+        from repro.obs import metrics as obs_metrics
+
+        meas = obs_metrics.counter("calibrate.measurements")
+        before = meas.value
+        prof = calibrate.warm()
+        calib_payload = {
+            "profile": prof.as_dict(),
+            "source": prof.source,
+            "path": str(calibrate.profile_path()),
+            "measurements_cold": meas.value - before,
+        }
+        print(
+            f"calibrate: {prof.source} profile generation "
+            f"{prof.generation} ({meas.value - before} measurements)",
+            file=sys.stderr,
+        )
+        # the timed benches run on the hand-set defaults (deterministic,
+        # machine-diffable artifacts); the calibrated model returns for the
+        # inversion gate below
+        calibrate.reset()
 
     print("name,us_per_call,derived")
     for bench in BENCHES:
@@ -1320,14 +1442,63 @@ def main(argv: List[str] | None = None) -> None:
             f"{args.obs}",
             file=sys.stderr,
         )
+    calibrated_reports = None
+    if args.calibrate:
+        import repro.calibrate as calibrate
+        from repro.obs import metrics as obs_metrics
+        from repro.core import clear_analysis_cache
+
+        # "restart" reuse: the re-warm must load the file persisted above
+        # with ZERO re-measurement (the acceptance criterion —
+        # calibrate.measurements stays flat)
+        meas = obs_metrics.counter("calibrate.measurements")
+        before = meas.value
+        prof = calibrate.warm()
+        rewarm_measurements = meas.value - before
+        assert rewarm_measurements == 0, (
+            f"re-warm re-measured ({rewarm_measurements} samples) instead "
+            "of reusing the persisted profile"
+        )
+        assert prof.source in ("measured", "persisted")
+        calib_payload["measurements_rewarm"] = rewarm_measurements
+        calib_payload["rewarm_source"] = prof.source
+        # re-run the auction under the measured units: fresh plans (the
+        # analysis memo deliberately ignores calibration), then the
+        # predicted-vs-measured inversion gate against the calibrated model
+        clear_analysis_cache()
+        calibrated_reports = collect_reports()
+        calib_payload["calibrated_strategies"] = {
+            name: [
+                (r["strategy"], r.get("predicted"))
+                for r in (rep.get("strategy_profile") or [])
+            ]
+            for name, rep in calibrated_reports.items()
+        }
+        calibrate.reset()
+        clear_analysis_cache()
+        pathlib.Path(args.calibrate).write_text(
+            json.dumps(calib_payload, indent=2)
+        )
+        print(
+            f"wrote calibration artifact (generation "
+            f"{calib_payload['profile']['generation']}, rewarm "
+            f"measurements {rewarm_measurements}) to {args.calibrate}",
+            file=sys.stderr,
+        )
     if args.update_baseline:
         pathlib.Path(args.baseline).write_text(json.dumps(record, indent=2))
         print(f"updated baseline {args.baseline}", file=sys.stderr)
     if args.check_baseline:
         failures = check_baseline(record, pathlib.Path(args.baseline))
-        if reports is None:
-            reports = collect_reports()
-        failures += check_strategy_inversions(reports)
+        # the inversion gate judges the CALIBRATED model when a profile was
+        # warmed this run — measured units are the model actually serving
+        # auctions on this host — and the hand-set defaults otherwise
+        if calibrated_reports is not None:
+            failures += check_strategy_inversions(calibrated_reports)
+        else:
+            if reports is None:
+                reports = collect_reports()
+            failures += check_strategy_inversions(reports)
         if failures:
             sys.exit(1)
 

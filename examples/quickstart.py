@@ -328,6 +328,62 @@ def main() -> None:
     spmd.force_device_count(None)
     obs.reset_all()
 
+    print()
+    print("=" * 70)
+    print("7. Calibration: measured per-host cost profiles (repro.calibrate)")
+    print("=" * 70)
+    # The cost hooks above priced every auction with hand-set default
+    # units.  repro.calibrate replaces them with MEASURED ones: a tiny
+    # microbenchmark suite runs through the real lowering machinery,
+    # fits per-level step/lane unit costs, and persists the profile
+    # keyed by a host fingerprint — so the next process (a serving
+    # restart) reloads it with zero re-measurement.  Only offer PRICES
+    # respond; the offer set, structural cache keys, and traces never
+    # see the profile (REPRO_CALIBRATE=off pins the defaults).
+    import os
+    import tempfile
+
+    from repro import calibrate
+    from repro.core import clear_analysis_cache
+
+    with tempfile.TemporaryDirectory() as cal_dir:
+        os.environ["REPRO_CALIBRATE_DIR"] = cal_dir
+        try:
+            p7 = plan(wide, PlanOptions(method="isd"))
+            (r0,) = p7.compile("xla").report().summary()["scc"]["recurrences"]
+            print(
+                f"  default model:    offers="
+                f"{ {k: round(v) for k, v in r0['offers'].items()} } "
+                f"(profile_generation={r0['profile_generation']})"
+            )
+            prof = calibrate.measure(n=256, widths=(4, 16), repeats=1)
+            print(
+                "  measured units:  "
+                + " ".join(f"{k}={v:.3g}" for k, v in prof.units.items())
+            )
+            clear_analysis_cache()  # fresh auction under the new prices
+            (r1,) = p7.compile("xla").report().summary()["scc"]["recurrences"]
+            print(
+                f"  calibrated:       offers="
+                f"{ {k: round(v) for k, v in r1['offers'].items()} } "
+                f"(profile_generation={r1['profile_generation']})"
+            )
+            # "restart": in-memory state gone, the profile file survives —
+            # warm() reloads it without re-running the microbenchmarks
+            # (PlanService(ServiceOptions(warm_profile=True)) does this
+            # at startup).
+            calibrate.reset()
+            again = calibrate.warm()
+            print(
+                f"  after restart:    warm() -> source={again.source} "
+                f"generation={again.generation} from "
+                f"{calibrate.profile_path().name} (zero re-measurement)"
+            )
+        finally:
+            os.environ.pop("REPRO_CALIBRATE_DIR", None)
+            calibrate.reset()
+            obs.reset_all()
+
 
 if __name__ == "__main__":
     main()

@@ -76,11 +76,16 @@ def __getattr__(name: str):
 # BackendSpec.level_cost without touching the heavy lowering machinery.
 # ---------------------------------------------------------------------- #
 
-# flat per-step overhead of one compiled band step, in padded-lane units.
-# Measured shape (ROADMAP "XLA band-step cost vs lane width"): a chunk=1
-# band costs ~1.5µs/step and the per-step cost grows roughly linearly with
-# the padded lane width, with the flat dispatch share worth about one lane.
-XLA_STEP_LANE_UNITS = 1.0
+# Hand-set default cost units, in padded-lane units.  Measured shape
+# (ROADMAP "XLA band-step cost vs lane width"): a chunk=1 band costs
+# ~1.5µs/step and the per-step cost grows roughly linearly with the padded
+# lane width, with the flat dispatch share worth about one lane.  These
+# are only the *defaults*: repro.calibrate replaces them with per-host
+# measured values once a profile is warmed, and every consumer (including
+# spmd_level_cost) resolves them late through calibrate.units(), so
+# monkeypatching them here takes effect everywhere.
+XLA_STEP_LANE_UNITS = 1.0   # flat per-step overhead of one band step
+XLA_LANE_UNITS = 1.0        # cost of one padded lane on top of it
 
 
 def _next_pow2(n: int) -> int:
@@ -96,13 +101,19 @@ def xla_level_cost(plan, ctx) -> float:
     the *padded* lane width of each statement's table row — so a skewed
     wavefront whose widest diagonal pads to 64 lanes loses its depth
     advantage against narrow sequential chunks (the open item this hook
-    closes).  Cost model: ``depth × statements × (flat + next_pow2(width))``.
+    closes).  Cost model: ``depth × statements × (step + lane ×
+    next_pow2(width))``, with the unit costs resolved through the host's
+    calibration profile (:mod:`repro.calibrate`) — the hand-set constants
+    above when nothing is warmed.
     """
 
+    from repro.calibrate import units as _units
+
+    u = _units()
     width = plan.max_width if plan.max_width else max(1, round(plan.width))
     lanes = _next_pow2(max(1, int(width)))
     return float(plan.depth) * len(ctx.statements) * (
-        XLA_STEP_LANE_UNITS + lanes
+        u["xla_step"] + u["xla_lane"] * lanes
     )
 
 

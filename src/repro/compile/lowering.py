@@ -98,6 +98,17 @@ class XlaLoweringError(ValueError):
 from repro.compile import _next_pow2  # noqa: E402
 
 
+# Width ladder for recurrence bands (ROADMAP 3b).  A band's ramp-up and
+# ramp-down levels run at sliced lane widths — halvings of the padded band
+# width, at most WIDTH_LADDER_RUNGS of them, never narrower than
+# WIDTH_LADDER_MIN lanes (below that the per-step dispatch cost dwarfs any
+# lane saving).  Read late (module attribute lookup, not captured values)
+# so benchmarks can pin ``lowering.WIDTH_LADDER_RUNGS = 0`` for an unsplit
+# control build.
+WIDTH_LADDER_RUNGS = 3
+WIDTH_LADDER_MIN = 8
+
+
 # ---------------------------------------------------------------------- #
 # Strict lane arithmetic.  XLA's CPU emitter compiles the whole computation
 # into one LLVM function with aggressive FP op fusion, so a multiply feeding
@@ -626,11 +637,17 @@ class CompiledProgram:
 
         stmt_statics: List[_StmtStatic] = []
         tables: List[Dict[str, np.ndarray]] = []
+        # Actual (unpadded) lane count of every table row, in row order, and
+        # each statement's padded width — the width ladder's raw material.
+        row_widths: List[List[int]] = []
+        wps: List[int] = []
         for s in program.statements:
             entries = per_stmt.get(s.name, [])
             G = len(entries)
             W = max((pts.shape[0] for _, pts in entries), default=1)
             Gp, Wp = _next_pow2(G + 1), self._pad_lanes(_next_pow2(W))
+            row_widths.append([int(pts.shape[0]) for _, pts in entries])
+            wps.append(Wp)
 
             glevel = np.full(Gp, n_levels, dtype=np.int32)  # sentinel rows
             lanemask = np.zeros((Gp, Wp), dtype=bool)
@@ -769,6 +786,9 @@ class CompiledProgram:
             segments, seg_dyn = self._segment_levels(
                 program, sched, n_levels, len(program.statements)
             )
+            seg_dyn = self._split_band_widths(
+                segments, seg_dyn, row_widths, wps
+            )
 
         static = self._make_static(tuple(stmt_statics), segments)
         # The trace identity, computed host-side: everything jax's jit cache
@@ -815,6 +835,95 @@ class CompiledProgram:
     # Minimum run of uniform levels worth collapsing into a nested loop —
     # below this the generic dispatcher's per-level cost doesn't matter.
     REC_BAND_MIN = 4
+
+    def _band_rungs(self, wpb: int) -> int:
+        """Width-ladder depth for a recurrence band of padded width
+        ``wpb``: the number of halvings (≤ ``WIDTH_LADDER_RUNGS``) whose
+        narrowest rung still holds ``WIDTH_LADDER_MIN`` lanes.  The sharded
+        artifact overrides this to 0 (its per-shard lane slicing needs the
+        full padded width).  Reads the module knobs late so a bench can
+        pin the ladder off for an unsplit control build."""
+
+        rungs = 0
+        while (
+            rungs < WIDTH_LADDER_RUNGS
+            and (wpb >> (rungs + 1)) >= WIDTH_LADDER_MIN
+        ):
+            rungs += 1
+        return rungs
+
+    def _split_band_widths(
+        self,
+        segments: Tuple[Tuple, ...],
+        seg_dyn: Tuple[np.ndarray, ...],
+        row_widths: List[List[int]],
+        wps: List[int],
+    ) -> Tuple[np.ndarray, ...]:
+        """Append width-ladder cut points to each recurrence band's dynamic
+        vector (ROADMAP 3b).
+
+        A skewed diamond's band ramps up to its widest diagonal and back
+        down, but every level pays for the *widest* statement row because
+        the whole band shares one padded lane count.  For a ladder of
+        ascending rung widths ``w_1 < … < w_L < wpb`` this computes, per
+        rung, the maximal prefix ``P_i`` (and suffix start ``Q_i``) of band
+        rows whose actual lane counts all fit ``w_i`` — monotone cuts
+        ``0 ≤ P_1 ≤ … ≤ P_L ≤ Q_L ≤ … ≤ Q_1 ≤ n`` appended as ``[P_1…P_L,
+        Q_L…Q_1]`` — so the executor can run the ramps at sliced lane
+        widths and only the plateau at full width.  Lanes sliced away are
+        pure padding (mask-false, repeat-first-point, trash-scattered), so
+        bit-equality is structural, not numerical luck.
+
+        The cut *values* ride in the traced ``seg_dyn`` vector; only the
+        ladder depth L changes the vector's shape, and L is a function of
+        the padded band width — already a bucket component — so the
+        four-level cache and the zero-re-trace property are preserved.
+        Uniform bands (every row as wide as the plateau) append nothing
+        and keep today's trace byte-for-byte.
+        """
+
+        out = []
+        for seg, dyn in zip(segments, seg_dyn):
+            if seg[0] != "rec":
+                out.append(dyn)
+                continue
+            stmt_ks = seg[1]
+            n = int(dyn[0])
+            row0 = [int(r) for r in dyn[1:]]
+            wpb = max(wps[k] for k in stmt_ks)
+            rungs = self._band_rungs(wpb)
+
+            def fits(t: int, w: int) -> bool:
+                return all(
+                    row_widths[k][row0[j] + t] <= min(w, wps[k])
+                    for j, k in enumerate(stmt_ks)
+                )
+
+            ws = [wpb >> (rungs - i) for i in range(rungs)]
+            cuts_p = []
+            for w in ws:
+                p = cuts_p[-1] if cuts_p else 0  # prefixes are monotone
+                while p < n and fits(p, w):
+                    p += 1
+                cuts_p.append(p)
+            cuts_q = []
+            for w in ws:
+                q = cuts_q[-1] if cuts_q else n  # suffixes are monotone
+                while q > cuts_p[-1] and fits(q - 1, w):
+                    q -= 1
+                cuts_q.append(q)
+            if rungs == 0 or (cuts_p[-1] == 0 and cuts_q[-1] == n):
+                # degenerate ladder (a uniform band): keep the un-split
+                # vector so the trace — and the bucket — match today's
+                out.append(dyn)
+                continue
+            extra = cuts_p + list(reversed(cuts_q))
+            out.append(
+                np.concatenate(
+                    [dyn, np.asarray(extra, dtype=np.int32)]
+                )
+            )
+        return tuple(out)
 
     @staticmethod
     def _segment_levels(
@@ -916,16 +1025,24 @@ class CompiledProgram:
 
         K = len(static.stmts)
 
-        def group_step(k, ss, c, store, coverage, bad, gate=None):
+        def group_step(k, ss, c, store, coverage, bad, gate=None,
+                       lane_cap=None):
             """Vectorized gather/compute/scatter of statement ``k``'s table
             row ``c``; returns (new write array, new coverage, bad flags).
             Read-only arrays are captured by closure — routing the whole
-            store through here would force XLA to copy every array."""
+            store through here would force XLA to copy every array.
+
+            ``lane_cap`` (a static int) restricts the step to the row's
+            leading ``lane_cap`` lanes — the width-ladder rungs of a
+            recurrence band's ramps use it to skip gathers/scatters on
+            lanes that are provably padding there (mask-false, so skipping
+            them is structural, not a numerical approximation)."""
 
             t = tables[k]
 
             def row(m):
-                return lax.dynamic_index_in_dim(m, c, axis=0, keepdims=False)
+                r = lax.dynamic_index_in_dim(m, c, axis=0, keepdims=False)
+                return r if lane_cap is None else r[:lane_cap]
 
             lanes = row(t["lanemask"])
             if gate is not None:  # condless path: fold the active
@@ -1028,13 +1145,26 @@ class CompiledProgram:
                 )
             else:
                 _tag, stmt_ks = seg
+                J = len(stmt_ks)
+                # Ladder depth, recovered from the dynamic vector's *shape*
+                # ([run, J row bases, 2·L cut points]).  The shape is a
+                # bucket component, so L is trace-stable — the module knob
+                # WIDTH_LADDER_RUNGS never leaks into a warm trace.
+                L = (dyn.shape[0] - 1 - J) // 2
 
-                def rec_body(t, carry, stmt_ks=stmt_ks, dyn=dyn):
+                def rec_body(t, carry, stmt_ks=stmt_ks, dyn=dyn, cap=None):
                     store, coverage, bad = carry
                     for j, k in enumerate(stmt_ks):  # lexical stmt order
                         ss = static.stmts[k]
+                        ck = (
+                            None
+                            if cap is None
+                            or cap >= tables[k]["lanemask"].shape[1]
+                            else cap
+                        )
                         new_write, new_cov, bad = group_step(
-                            k, ss, dyn[1 + j] + t, store, coverage, bad
+                            k, ss, dyn[1 + j] + t, store, coverage, bad,
+                            lane_cap=ck,
                         )
                         store = dict(store)
                         store[ss.write] = new_write
@@ -1043,9 +1173,34 @@ class CompiledProgram:
                             coverage[ss.write] = new_cov
                     return (store, coverage, bad)
 
-                store, coverage, bad = lax.fori_loop(
-                    0, dyn[0], rec_body, (store, coverage, bad)
-                )
+                if L == 0:
+                    store, coverage, bad = lax.fori_loop(
+                        0, dyn[0], rec_body, (store, coverage, bad)
+                    )
+                else:
+                    # Width ladder: 2·L+1 chained fori_loops over the band
+                    # — ramp-up rungs at ascending lane caps, the plateau
+                    # at full width, ramp-down rungs mirrored.  Ranges the
+                    # ladder found empty are zero-trip at run time.
+                    wpb = max(
+                        tables[k]["lanemask"].shape[1] for k in stmt_ks
+                    )
+                    ws = [wpb >> (L - i) for i in range(L)]
+                    caps = ws + [wpb] + list(reversed(ws))
+                    edges = (
+                        [0]
+                        + [dyn[1 + J + i] for i in range(2 * L)]
+                        + [dyn[0]]
+                    )
+                    for lo, hi, cap in zip(edges, edges[1:], caps):
+                        store, coverage, bad = lax.fori_loop(
+                            lo,
+                            hi,
+                            lambda t, carry, cap=cap: rec_body(
+                                t, carry, cap=cap
+                            ),
+                            (store, coverage, bad),
+                        )
         return store, coverage, bad
 
     # ------------------------------------------------------------------ #

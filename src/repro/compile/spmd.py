@@ -58,7 +58,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 from repro.obs import metrics as _metrics
-from repro.compile import XLA_STEP_LANE_UNITS, _next_pow2
+from repro.compile import _next_pow2
 from repro.compile.cache import CompileCache
 from repro.compile.lowering import CompiledProgram, _CaseStatic
 
@@ -157,6 +157,13 @@ def reset_spmd_caches() -> None:
 # must not perturb single-device strategy selection.
 # ---------------------------------------------------------------------- #
 
+# Hand-set defaults for the collective terms, in lane units.  Like the
+# constants in repro.compile these are only the profile-less fallback:
+# spmd_level_cost resolves all four unit costs late through
+# repro.calibrate.units(), so a warmed profile (or a monkeypatched
+# constant — the old import-by-value of XLA_STEP_LANE_UNITS made patches
+# invisible here) takes effect on the next auction.
+
 # flat per-step cost of issuing the lane-gather collective, in lane units
 SPMD_COLLECTIVE_UNITS = 4.0
 # per-lane cost of moving one gathered lane between devices
@@ -174,13 +181,18 @@ def spmd_level_cost(plan, ctx) -> float:
     ``spmd_wide_wavefront`` bench and ``tests/test_spmd.py`` pin.
     """
 
+    from repro.calibrate import units as _units
+
+    u = _units()
     n = device_count()
     width = plan.max_width if plan.max_width else max(1, round(plan.width))
     # sharded tables pad lanes up to the mesh width (see _pad_lanes)
     lanes = max(_next_pow2(max(1, int(width))), n if n > 1 else 1)
-    per_step = XLA_STEP_LANE_UNITS + lanes / n
+    per_step = u["xla_step"] + u["xla_lane"] * lanes / n
     if n > 1:
-        per_step += SPMD_COLLECTIVE_UNITS + SPMD_COLLECTIVE_LANE_UNITS * lanes
+        per_step += (
+            u["spmd_collective"] + u["spmd_collective_lane"] * lanes
+        )
     return float(plan.depth) * len(ctx.statements) * per_step
 
 
@@ -224,6 +236,14 @@ class SpmdCompiledProgram(CompiledProgram):
         # active bit folds into the lane mask instead (the narrow-statement
         # path of the base lowering), which is mask-equivalent.
         return False
+
+    def _band_rungs(self, wpb: int) -> int:
+        # no width ladder when sharded: the per-shard lane slice +
+        # all_gather reassembly needs every statement at its full padded
+        # width (lane counts must divide the mesh axis).  Returning 0 keeps
+        # the band's dynamic vector cut-free, so the base executor derives
+        # L == 0 from its shape and stays on the single-loop path.
+        return 0
 
     def _make_static(self, stmts, segments) -> _SpmdCaseStatic:
         return _SpmdCaseStatic(

@@ -292,6 +292,11 @@ class StrategyPlan:
     # loser's prediction up against the winner's measured wall time; empty
     # for forced strategies (no auction happened)
     offers: Tuple[Tuple[str, float], ...] = ()
+    # generation of the repro.calibrate profile whose units priced the
+    # auction: 0 = hand-set defaults (or a forced strategy — no auction).
+    # Provenance only; deliberately absent from scc_signature and every
+    # structural cache key.
+    profile_generation: int = 0
 
 
 class SchedulingPolicy:
@@ -522,6 +527,14 @@ class PerSccModel(SchedulingPolicy):
         )
 
 
+# Per-batched-group dispatch weight of the interpreters' default
+# depth × statement-groups cost model.  A uniform scale that never flips
+# an auction on its own — it exists so a calibrated profile
+# (repro.calibrate) can express interpreter costs on the same measured
+# scale as the backend hooks; resolved late like every other cost unit.
+DISPATCH_UNITS = 1.0
+
+
 # chunk first: it is the tie-breaker (the historical behavior) and the
 # universal fallback for forced strategies that turn out infeasible
 DEFAULT_STRATEGIES: Tuple[SchedulingPolicy, ...] = (
@@ -560,6 +573,11 @@ class CostModelPolicy(SchedulingPolicy):
         ]
         if not offers:
             return None
+        # late import: the auction is priced by whatever calibration state
+        # is active *now* (a warmed per-host profile, or the hand-set
+        # module constants) — never frozen at import time
+        from repro.calibrate import dispatch_units, profile_generation
+
         if self.level_cost is not None:
             scored = [(float(self.level_cost(p, ctx)), p) for p in offers]
             tag = (
@@ -567,9 +585,20 @@ class CostModelPolicy(SchedulingPolicy):
                 f"({getattr(self.level_cost, '__name__', 'level_cost')})"
             )
         else:
-            scored = [(p.cost, p) for p in offers]
+            # the interpreters' depth × groups model, weighted by the
+            # calibrated per-dispatch cost.  The weight is uniform across
+            # offers — it can never flip this auction — so the *recorded*
+            # scoreboard keeps the model-space prices (reports stay
+            # calibration-invariant; see tests/test_calibrate.py) while
+            # the scoring pass reads the profile like every other consumer
+            du = dispatch_units()
+            scored = [(p.cost * du, p) for p in offers]
             tag = "cost model"
         best_cost, best = min(scored, key=lambda t: t[0])  # tie → first
+        if self.level_cost is None:
+            # record model-space, not the uniformly-scaled scores
+            scored = [(p.cost, p) for p in offers]
+            best_cost = best.cost
         scoreboard = ", ".join(f"{p.strategy}={c:.0f}" for c, p in scored)
         return dataclasses.replace(
             best,
@@ -577,6 +606,7 @@ class CostModelPolicy(SchedulingPolicy):
             reason=f"{tag} picked {best.strategy} "
             f"({scoreboard}); {best.reason}",
             offers=tuple((p.strategy, c) for c, p in scored),
+            profile_generation=profile_generation(),
         )
 
 

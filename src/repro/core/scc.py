@@ -318,6 +318,10 @@ class SccInfo:
     # the policy's full predicted scoreboard, (strategy, cost) per offer —
     # empty for forced strategies; feeds the predicted-vs-measured profiler
     offers: Tuple[Tuple[str, float], ...] = ()
+    # generation of the calibration profile that priced the auction
+    # (0 = hand-set defaults or forced strategy); provenance only, never
+    # part of scc_signature
+    profile_generation: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -349,6 +353,7 @@ class SccPartition:
                     "cost": s.cost,
                     "reason": s.reason,
                     "offers": {name: cost for name, cost in s.offers},
+                    "profile_generation": s.profile_generation,
                 }
                 for s in self.recurrences
             ],
@@ -465,6 +470,7 @@ def analyze_sccs(
                 cost=plan.cost,
                 reason=plan.reason,
                 offers=plan.offers,
+                profile_generation=plan.profile_generation,
             )
         )
     return SccPartition(

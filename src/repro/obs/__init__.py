@@ -41,10 +41,18 @@ def obs_summary(backend: str = "") -> dict:
     tracing flag state at summary time.
     """
 
+    # repro.calibrate is import-light (stdlib + obs.metrics), so the lazy
+    # import keeps this module's no-repro-imports rule at module scope only
+    from repro.calibrate import summary_pointer
+
     return {
         "tracing": trace.tracing_enabled(),
         "trace_export": "Executable.trace_json() / obs.trace.trace_json()",
         "metrics_export": "obs.metrics.snapshot()",
+        # where the host cost profile lives (report-stable: names the
+        # calibration *state*, never measured values — two reports for the
+        # same plan summarize identically regardless of runs in between)
+        "calibration": summary_pointer(),
         "backend": backend,
     }
 
@@ -85,3 +93,8 @@ def reset_all() -> None:
     serve_mod = sys.modules.get("repro.serve.service")
     if serve_mod is not None:
         serve_mod.reset_default_service()
+    # and the in-memory cost profile (repro.calibrate): persisted profile
+    # files survive on purpose — a reset process re-loads, never re-measures
+    calib_mod = sys.modules.get("repro.calibrate")
+    if calib_mod is not None:
+        calib_mod.reset()

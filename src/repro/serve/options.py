@@ -36,6 +36,11 @@ class ServiceOptions:
     outstanding requests is rejected instead of queueing without limit.
     ``default_tenant``: tenant used when ``submit()``/``resolve()`` are not
     given one.
+    ``warm_profile``: warm the host's cost-calibration profile
+    (:func:`repro.calibrate.warm`) once at service construction — a
+    persisted profile loads in microseconds, a cold host pays the
+    microbenchmark once *before* traffic instead of never (plans then price
+    strategy offers with measured units).
     """
 
     backend: str = "xla"
@@ -44,6 +49,7 @@ class ServiceOptions:
     plan_cache_bytes: int = 64 * 1024 * 1024
     max_queue_depth: int = 64
     default_tenant: str = "default"
+    warm_profile: bool = False
 
     def __init__(self, **knobs: object) -> None:
         accepted = tuple(f.name for f in dataclasses.fields(self))
@@ -83,4 +89,8 @@ class ServiceOptions:
             raise ValueError(
                 f"default_tenant must be a non-empty string, got "
                 f"{self.default_tenant!r}"
+            )
+        if not isinstance(self.warm_profile, bool):
+            raise ValueError(
+                f"warm_profile must be a bool, got {self.warm_profile!r}"
             )

@@ -193,6 +193,14 @@ class PlanService:
             max_workers=self.options.workers,
             thread_name_prefix="plan-serve",
         )
+        if self.options.warm_profile:
+            # load-or-measure the host cost profile before the first
+            # request, so every plan this service builds prices strategy
+            # offers with the same (measured) units — a persisted profile
+            # makes this a microsecond file read, zero re-measurement
+            from repro.calibrate import warm
+
+            warm()
 
     # ------------------------------------------------------------------ #
     # Cache plumbing
@@ -328,6 +336,7 @@ class PlanService:
         tenant: Optional[str] = None,
         store: Optional[Mapping[str, dict]] = None,
         run: bool = False,
+        deadline_ms: Optional[float] = None,
     ) -> "concurrent.futures.Future[ServiceResult]":
         """Admit one request: plan (through the tenant's LRU), compile for
         the service backend, optionally execute.
@@ -336,8 +345,30 @@ class PlanService:
         execute the compiled artifact (``store`` is copied, not mutated).
         Raises ``RuntimeError`` when the service is closed or the admission
         bound (``max_queue_depth``) is reached.
+
+        ``deadline_ms`` bounds the *queueing* delay: a request still waiting
+        for a worker past its deadline is dropped at dequeue — its future
+        fails with ``RuntimeError`` and ``serve.deadline_drops`` counts it —
+        instead of occupying a worker to produce a result the caller has
+        already abandoned.  A request that *starts* before the deadline runs
+        to completion (the deadline is admission control, not preemption).
         """
 
+        if deadline_ms is not None:
+            if (
+                isinstance(deadline_ms, bool)
+                or not isinstance(deadline_ms, (int, float))
+                or not deadline_ms > 0
+            ):
+                raise ValueError(
+                    f"deadline_ms must be a positive number of milliseconds,"
+                    f" got {deadline_ms!r}"
+                )
+        deadline = (
+            None
+            if deadline_ms is None
+            else time.perf_counter() + deadline_ms / 1e3
+        )
         with self._lock:
             if self._closed:
                 raise RuntimeError(
@@ -351,7 +382,7 @@ class PlanService:
                 )
             self._submitted += 1
         future = self._pool.submit(
-            self._handle, program, options, tenant, store, run
+            self._handle, program, options, tenant, store, run, deadline
         )
         with self._lock:
             self._outstanding.add(future)
@@ -372,9 +403,17 @@ class PlanService:
         tenant: Optional[str],
         store: Optional[Mapping[str, dict]],
         run: bool,
+        deadline: Optional[float] = None,
     ) -> ServiceResult:
         tenant = tenant if tenant is not None else self.options.default_tenant
         t0 = time.perf_counter()
+        if deadline is not None and t0 > deadline:
+            _metrics.counter("serve.deadline_drops").inc()
+            raise RuntimeError(
+                f"request dropped at dequeue: queued "
+                f"{(t0 - deadline) * 1e3:.1f}ms past its deadline "
+                f"(deadline_ms admission control)"
+            )
         plan_obj, cached, (tenant, key) = self._resolve_entry(
             program, options, tenant=tenant
         )
@@ -483,6 +522,7 @@ class PlanService:
                 "submitted": self._submitted,
                 "completed": self._completed,
             }
+        out["deadline_drops"] = snap.get("serve.deadline_drops", 0)
         out["traces"] = snap.get("xla.traces", 0)
         out["bucket_hits"] = snap.get("xla.bucket_hits", 0)
         out["bucket_misses"] = snap.get("xla.bucket_misses", 0)

@@ -1,0 +1,330 @@
+"""The per-host cost-profile subsystem (:mod:`repro.calibrate`).
+
+Contracts under test:
+
+* **Persistence round-trip** — ``measure()`` installs and persists a
+  schema-versioned profile; a fresh process state (``reset()``) reloads it
+  via ``warm()`` with *zero re-measurement* (``calibrate.measurements``
+  stays flat — the restart-reuse acceptance criterion).
+* **Corrupt / stale fallback** — truncated JSON, wrong schema, wrong
+  fingerprint, or invalid unit values are each ignored with a
+  ``calibrate.fallbacks`` tick; the hand-set defaults keep pricing.
+* **Env switch** — ``REPRO_CALIBRATE=off`` pins the defaults regardless of
+  warmed or persisted state.
+* **Invariance pins** — like the tracing-invariance pins in
+  ``test_obs.py``: calibration state must never leak into structural cache
+  keys, and only offer *prices* (never the offer set or the schedule's
+  structure) may respond to a profile.  ``StrategyPlan.profile_generation``
+  records which profile priced the auction.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+import repro.calibrate as calibrate
+import repro.obs as obs
+from repro.obs import metrics
+from repro.core import (
+    ArrayRef,
+    LoopProgram,
+    PlanOptions,
+    Statement,
+    plan,
+)
+
+FAST_UNITS = {
+    "xla_step": 0.5,
+    "xla_lane": 0.25,
+    "spmd_collective": 2.0,
+    "spmd_collective_lane": 0.0625,
+    "dispatch": 40.0,
+}
+
+
+@pytest.fixture(autouse=True)
+def _isolated_calibration(tmp_path, monkeypatch):
+    """Every test gets its own cache dir, the env switch unset, and a
+    clean in-memory state on both sides (pytest runs this file before
+    test_plan_api's pinned golden summary — leaking an active profile
+    would flip its calibration pointer)."""
+
+    monkeypatch.setenv("REPRO_CALIBRATE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_CALIBRATE", raising=False)
+    obs.reset_all()
+    yield
+    obs.reset_all()
+
+
+def _fake_measure(monkeypatch, units=None):
+    """Patch the microbenchmark suite with a deterministic stub that still
+    ticks the measurement counter (so reuse-vs-remeasure is observable)."""
+
+    from repro.calibrate import microbench
+
+    def fake_measure_units(**kwargs):
+        metrics.counter("calibrate.measurements").inc()
+        return dict(units or FAST_UNITS), {"stub": True}
+
+    monkeypatch.setattr(microbench, "measure_units", fake_measure_units)
+
+
+def _recurrence(ni=6, nj=24):
+    return LoopProgram(
+        statements=(
+            Statement(
+                "S1",
+                ArrayRef("a", (0, 0)),
+                (ArrayRef("a", (0, -1)), ArrayRef("a", (-1, 1))),
+            ),
+        ),
+        bounds=((0, ni), (0, nj)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Defaults / env switch
+# ---------------------------------------------------------------------- #
+
+def test_default_units_resolve_hand_set_constants_late(monkeypatch):
+    import repro.compile as compile_pkg
+
+    assert calibrate.units()["xla_step"] == compile_pkg.XLA_STEP_LANE_UNITS
+    # late resolution: a monkeypatched constant takes effect immediately,
+    # in xla_level_cost AND spmd_level_cost (the old spmd.py imported the
+    # constant by value at module import time, freezing it)
+    monkeypatch.setattr(compile_pkg, "XLA_STEP_LANE_UNITS", 7.25)
+    assert calibrate.units()["xla_step"] == 7.25
+    from repro.compile.spmd import spmd_level_cost  # noqa: F401 (imports)
+
+    assert calibrate.units()["xla_step"] == 7.25
+
+
+def test_env_switch_pins_defaults(monkeypatch):
+    _fake_measure(monkeypatch)
+    calibrate.measure()
+    assert calibrate.active_profile().source == "measured"
+    monkeypatch.setenv("REPRO_CALIBRATE", "off")
+    assert not calibrate.enabled()
+    assert calibrate.active_profile().source == "default"
+    assert calibrate.profile_generation() == 0
+    assert calibrate.units() == calibrate.default_profile().units
+    # measure/warm become no-ops returning defaults
+    assert calibrate.measure().source == "default"
+    assert calibrate.warm().source == "default"
+
+
+# ---------------------------------------------------------------------- #
+# Persistence round-trip + restart reuse
+# ---------------------------------------------------------------------- #
+
+def test_measure_persists_and_roundtrips(monkeypatch, tmp_path):
+    _fake_measure(monkeypatch)
+    prof = calibrate.measure()
+    assert prof.source == "measured"
+    assert prof.generation == 1
+    assert prof.units == FAST_UNITS
+    path = calibrate.profile_path()
+    assert path.parent == tmp_path
+    on_disk = json.loads(path.read_text())
+    assert on_disk["schema"] == calibrate.SCHEMA_VERSION
+    assert on_disk["fingerprint"] == calibrate.host_fingerprint()
+    loaded = calibrate.load_profile()
+    assert loaded is not None
+    assert loaded.source == "persisted"
+    assert loaded.units == prof.units
+    assert loaded.generation == 1
+    # re-measuring bumps the generation monotonically
+    assert calibrate.measure().generation == 2
+
+
+def test_warm_reuses_persisted_profile_with_zero_remeasurement(monkeypatch):
+    _fake_measure(monkeypatch)
+    calibrate.warm()  # cold: measures and persists
+    assert metrics.counter("calibrate.measurements").value == 1
+    # "restart": in-memory state gone, file survives
+    obs.reset_all()
+    assert calibrate.active_profile().source == "default"
+    prof = calibrate.warm()
+    assert prof.source == "persisted"
+    assert prof.generation == 1
+    assert metrics.counter("calibrate.measurements").value == 0  # flat
+    assert metrics.counter("calibrate.loads").value == 1
+    # further warms are no-ops on the installed profile
+    assert calibrate.warm() is prof
+    assert metrics.counter("calibrate.loads").value == 1
+
+
+def test_plan_service_warm_profile_knob(monkeypatch):
+    _fake_measure(monkeypatch)
+    from repro.serve import PlanService, ServiceOptions
+
+    with pytest.raises(ValueError):
+        ServiceOptions(warm_profile="yes")
+    with PlanService(ServiceOptions(warm_profile=True)):
+        assert calibrate.active_profile().source == "measured"
+    obs.reset_all()
+    # second service start: persisted reuse, no re-measurement
+    with PlanService(ServiceOptions(warm_profile=True)):
+        assert calibrate.active_profile().source == "persisted"
+        assert metrics.counter("calibrate.measurements").value == 0
+
+
+# ---------------------------------------------------------------------- #
+# Corrupt / stale fallback
+# ---------------------------------------------------------------------- #
+
+def test_corrupt_and_stale_profiles_fall_back(monkeypatch):
+    path = calibrate.profile_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+
+    # missing file: None, but NOT a fallback (nothing was corrupt)
+    assert calibrate.load_profile() is None
+    assert metrics.counter("calibrate.fallbacks").value == 0
+
+    good = calibrate.CostProfile(
+        units=dict(FAST_UNITS),
+        fingerprint=calibrate.host_fingerprint(),
+        generation=3,
+        source="measured",
+    )
+
+    def dump(mutate):
+        raw = good.as_dict()
+        mutate(raw)
+        path.write_text(json.dumps(raw))
+
+    cases = [
+        lambda raw: raw.update(schema=99),
+        lambda raw: raw.update(fingerprint="feedfacedeadbeef"),
+        lambda raw: raw.update(generation=-1),
+        lambda raw: raw["units"].update(xla_step=0.0),
+        lambda raw: raw["units"].update(xla_lane=float("nan")),
+        lambda raw: raw["units"].pop("dispatch"),
+    ]
+    for i, mutate in enumerate(cases, start=1):
+        dump(mutate)
+        assert calibrate.load_profile() is None
+        assert metrics.counter("calibrate.fallbacks").value == i
+
+    # truncated JSON (a torn write without the atomic replace)
+    path.write_text(json.dumps(good.as_dict())[:25])
+    assert calibrate.load_profile() is None
+
+    # warm() on a corrupt file re-measures instead of trusting it
+    _fake_measure(monkeypatch)
+    prof = calibrate.warm()
+    assert prof.source == "measured"
+    assert metrics.counter("calibrate.measurements").value == 1
+    # and the hand-set defaults kept pricing until then
+    assert calibrate.load_profile().units == FAST_UNITS
+
+
+def test_foreign_host_profile_triggers_remeasure(monkeypatch):
+    _fake_measure(monkeypatch)
+    calibrate.measure()
+    old_path = calibrate.profile_path()
+    obs.reset_all()
+    # the host changes identity (e.g. a different device count after
+    # restart): the old file's *content* fingerprint no longer validates,
+    # and the new host's own profile path does not exist yet
+    monkeypatch.setattr(
+        calibrate, "host_fingerprint", lambda info=None: "0123456789abcdef"
+    )
+    assert calibrate.load_profile(old_path) is None  # stale, fallback ticked
+    assert metrics.counter("calibrate.fallbacks").value == 1
+    prof = calibrate.warm()
+    assert prof.source == "measured"
+    assert prof.fingerprint == "0123456789abcdef"
+    assert metrics.counter("calibrate.measurements").value == 1
+
+
+# ---------------------------------------------------------------------- #
+# Invariance pins: structural keys and offers vs calibration state
+# ---------------------------------------------------------------------- #
+
+def test_structural_key_invariant_to_calibration(monkeypatch):
+    from repro.compile import structural_key
+
+    prog = _recurrence()
+    retained = tuple(plan(prog).elimination.retained)
+    before = structural_key(prog, retained, model="doall")
+    _fake_measure(
+        monkeypatch,
+        units={**FAST_UNITS, "xla_step": 1e6, "dispatch": 1e-6},
+    )
+    calibrate.measure()
+    assert structural_key(prog, retained, model="doall") == before
+
+
+def test_offers_and_schedule_structure_invariant_to_calibration(monkeypatch):
+    """Only offer *prices* may respond to the profile: the offer set, the
+    winning schedule's structure under a pinned policy, and the plan's
+    sync instructions stay put; ``profile_generation`` records provenance."""
+
+    from repro.core import clear_analysis_cache
+
+    prog = _recurrence()
+    rec0 = (
+        plan(prog).compile("wavefront").report().wavefront.scc.recurrences[0]
+    )
+    assert rec0.profile_generation == 0
+    assert rec0.offers  # the auto auction ran
+
+    _fake_measure(
+        monkeypatch,
+        units={**FAST_UNITS, "dispatch": 123.0},
+    )
+    calibrate.measure()
+    clear_analysis_cache()  # fresh auction, profile intact
+    rec1 = (
+        plan(prog).compile("wavefront").report().wavefront.scc.recurrences[0]
+    )
+    assert rec1.strategy == rec0.strategy
+    assert rec1.chunk == rec0.chunk
+    # the offer set — and even the recorded model-space prices — are
+    # calibration-invariant (the profile scales them at scoring time,
+    # uniformly for the interpreter's dispatch-weight model)
+    assert rec1.offers == rec0.offers
+    assert rec1.profile_generation == 1
+
+
+def test_obs_summary_carries_calibration_pointer(monkeypatch):
+    assert obs.obs_summary("xla")["calibration"] == {
+        "enabled": True,
+        "source": "default",
+        "generation": 0,
+        "profile_export": (
+            "repro.calibrate.active_profile() / profile_path()"
+        ),
+    }
+    _fake_measure(monkeypatch)
+    calibrate.measure()
+    ptr = obs.obs_summary("xla")["calibration"]
+    assert ptr["source"] == "measured"
+    assert ptr["generation"] == 1
+
+
+# ---------------------------------------------------------------------- #
+# One real (tiny) measurement through the lowering machinery
+# ---------------------------------------------------------------------- #
+
+def test_real_microbenchmark_smoke():
+    prof = calibrate.measure(n=256, widths=(4, 16), repeats=1)
+    assert prof.source == "measured"
+    for name in calibrate.UNIT_NAMES:
+        assert prof.units[name] > 0.0
+    assert metrics.counter("calibrate.measurements").value > 0
+    # measured units price the xla hook immediately
+    assert calibrate.units() == prof.units
+
+
+def test_microbench_rejects_degenerate_parameters():
+    from repro.calibrate.microbench import measure_units
+
+    with pytest.raises(ValueError):
+        measure_units(n=256, widths=(8,))  # one width cannot fit a line
+    with pytest.raises(ValueError):
+        measure_units(n=64, widths=(4, 32))  # bands too short to difference

@@ -460,6 +460,17 @@ class TestBackCompatShim:
                     "Executable.trace_json() / obs.trace.trace_json()"
                 ),
                 "metrics_export": "obs.metrics.snapshot()",
+                # calibration pointer (PR 10): the profile *state*, never
+                # measured unit values (tests pin the default state via the
+                # reset fixture / REPRO_CALIBRATE handling)
+                "calibration": {
+                    "enabled": True,
+                    "source": "default",
+                    "generation": 0,
+                    "profile_export": (
+                        "repro.calibrate.active_profile() / profile_path()"
+                    ),
+                },
                 "backend": "threaded",
             },
         }

@@ -159,6 +159,54 @@ def test_admission_bound_and_close_reject():
     svc.close()  # idempotent
 
 
+def test_deadline_drops_expired_queued_request():
+    """A request still queued past its ``deadline_ms`` is dropped at
+    dequeue (future fails, ``serve.deadline_drops`` counts it) while the
+    request occupying the worker runs to completion.  Deterministic: with
+    one worker, the deadlined request cannot start until the first request
+    finishes, and the first request is parked on the structure admission
+    lock until well past the deadline."""
+
+    import time
+
+    obs.reset_all()
+    svc = PlanService(ServiceOptions(workers=1, max_queue_depth=4))
+    prog = _doall_program(8)
+    from repro.compile.structure import program_fingerprint
+
+    gate = svc._structure_lock(program_fingerprint(prog))
+    gate.acquire()
+    try:
+        first = svc.submit(prog, tenant="t")
+        doomed = svc.submit(prog, tenant="t", deadline_ms=1.0)
+        # hold the gate until the deadline has certainly expired
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < 0.02:
+            time.sleep(0.005)
+    finally:
+        gate.release()
+    assert first.result().plan is not None
+    with pytest.raises(RuntimeError) as exc:
+        doomed.result()
+    assert "deadline" in str(exc.value)
+    stats = svc.drain()
+    assert stats["deadline_drops"] == 1
+    assert metrics.counter("serve.deadline_drops").value == 1
+    # a request that starts before its deadline is NOT preempted
+    ok = svc.submit(prog, tenant="t", deadline_ms=60_000.0).result()
+    assert ok.plan is not None
+    svc.close()
+
+
+def test_deadline_ms_validation():
+    svc = PlanService(ServiceOptions(workers=1))
+    prog = _doall_program(8)
+    for bad in (0, -1, -0.5, True, "5"):
+        with pytest.raises(ValueError):
+            svc.submit(prog, deadline_ms=bad)
+    svc.close()
+
+
 # ---------------------------------------------------------------------- #
 # The soak: re-trace rate 0 + evictions + mid-soak oracle samples
 # ---------------------------------------------------------------------- #
